@@ -1,0 +1,74 @@
+"""Wall-clock microbenchmarks of the real compute paths (CPU, small
+shapes): reported as us_per_call so regressions are visible."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                       # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run():
+    from repro.common.config import get_config
+    from repro.models.api import build_model
+    from repro.serving.generator import GenRequest, LMServer
+
+    rows = []
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    bundle = build_model(cfg, compute_dtype=jnp.float32)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 32), jnp.int32),
+        "targets": jnp.zeros((2, 32), jnp.int32),
+        "mask": jnp.ones((2, 32), jnp.float32),
+    }
+    loss = jax.jit(lambda p, b: bundle.loss_fn(p, b)[0])
+    rows.append({"name": "loss_fwd_tinyllama_smoke",
+                 "us_per_call": round(_time(loss, params, batch), 1)})
+
+    grad = jax.jit(jax.grad(lambda p, b: bundle.loss_fn(p, b)[0]))
+    rows.append({"name": "grad_tinyllama_smoke",
+                 "us_per_call": round(_time(grad, params, batch), 1)})
+
+    cache = bundle.init_cache(2, 64, dtype=jnp.float32)
+    dec = jax.jit(bundle.decode_step)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    lens = jnp.full((2,), 8, jnp.int32)
+    rows.append({"name": "decode_step_tinyllama_smoke",
+                 "us_per_call": round(_time(dec, params, toks, cache, lens), 1)})
+
+    # serving throughput
+    server = LMServer(bundle, max_batch=4, cache_len=64, params=params)
+    for i in range(8):
+        server.submit(GenRequest(rid=i, prompt=[1, 2, 3], max_new_tokens=8))
+    t0 = time.perf_counter()
+    done = server.run()
+    dt = time.perf_counter() - t0
+    toks_out = sum(len(r.output) for r in done)
+    rows.append({"name": "server_tokens_per_s",
+                 "us_per_call": round(dt / max(toks_out, 1) * 1e6, 1),
+                 "derived": f"{toks_out / dt:.1f} tok/s"})
+
+    # kernels (interpret mode)
+    from repro.kernels import ops
+
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 2, 16))
+    rows.append({
+        "name": "flash_attention_interpret_64",
+        "us_per_call": round(_time(
+            lambda: ops.flash_attention(q, k, v, block_q=32, block_k=32,
+                                        interpret=True)), 1)})
+    return rows

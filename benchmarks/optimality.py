@@ -1,0 +1,63 @@
+"""Greedy-vs-optimal rate: the paper's 89/95 (93.7%) claim.
+
+95 instances = random samples over (model combo, requester, device
+availability, request count); each instance is solved by Algorithm 1 and
+by brute force, and we count exact matches (within float tolerance).
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+
+from repro.core.module import distinct_modules
+from repro.core.placement import greedy_place, optimal_place
+from repro.core.profiles import install_profile, make_testbed
+from repro.core.routing import simulate
+from repro.core.zoo import paper_zoo, request_for
+
+SMALL_MODELS = [
+    "clip-resnet-50", "clip-resnet-101", "clip-vit-b/32", "clip-vit-b/16",
+    "clip-vit-l/14", "encoder-only-vqa-s", "encoder-only-vqa-l",
+    "alignment-vit-b", "clip-cls-vit-b/16", "nlp-connect",
+]
+
+
+def run(n_instances: int = 95, seed: int = 0):
+    zoo = paper_zoo()
+    rng = random.Random(seed)
+    matches, total, ratios = 0, 0, []
+    for i in range(n_instances):
+        name = rng.choice(SMALL_MODELS)
+        mdl = zoo[name]
+        cluster = make_testbed(with_server=rng.random() < 0.3)
+        # random availability: drop up to one device
+        if rng.random() < 0.4 and len(cluster.devices) > 2:
+            cluster = cluster.without(rng.choice(cluster.devices).name)
+        install_profile(cluster, distinct_modules([mdl]).values())
+        requester = rng.choice(cluster.devices).name
+        # the paper's protocol: 19 (benchmark x model) combos x 5 trials,
+        # one inference request per trial
+        reqs = [request_for(mdl, 0, requester)]
+        pl_g = greedy_place([mdl], cluster)
+        if not pl_g.feasible:
+            continue
+        t_g = simulate(reqs, pl_g, cluster, [mdl]).total_latency
+        _, t_o = optimal_place([mdl], cluster, reqs)
+        total += 1
+        ratios.append(t_g / t_o if t_o > 0 else 1.0)
+        if t_g <= t_o * 1.001:
+            matches += 1
+    within5 = sum(1 for r in ratios if r <= 1.05)
+    return [{
+        "instances": total,
+        # exact match under a NOISELESS simulator (the paper's 89/95 is
+        # under wall-clock measurement noise; 5 trials averaged)
+        "optimal_matches_exact": matches,
+        "match_rate_exact_pct": round(100 * matches / max(total, 1), 1),
+        "matches_within_5pct": within5,
+        "match_rate_5pct": round(100 * within5 / max(total, 1), 1),
+        "paper_rate_pct": 93.7,
+        "mean_ratio_to_optimal": round(sum(ratios) / max(len(ratios), 1), 4),
+        "worst_ratio": round(max(ratios, default=1.0), 4),
+    }]

@@ -1,0 +1,58 @@
+"""Roofline table: read the dry-run artifacts and emit §Roofline rows."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+ART = REPO / "results" / "dryrun"
+
+
+def rows(mesh: str = "pod16x16", include_variants: bool = False):
+    out = []
+    if not ART.exists():
+        return out
+    for f in sorted(ART.glob(f"*__{mesh}*.json")):
+        parts = f.stem.split("__")
+        if len(parts) == 4 and not include_variants:
+            continue
+        data = json.loads(f.read_text())
+        if "skipped" in data:
+            out.append({"arch": data["arch"], "shape": data["shape"],
+                        "mesh": data["mesh"], "skipped": data["skipped"]})
+            continue
+        r = data["roofline"]
+        out.append({
+            "arch": data["arch"], "shape": data["shape"],
+            "mesh": data["mesh"],
+            "variant": data.get("perf_variant", "baseline"),
+            "t_compute_s": round(r["t_compute_s"], 4),
+            "t_memory_s": round(r["t_memory_s"], 4),
+            "t_collective_s": round(r["t_collective_s"], 4),
+            "dominant": r["dominant"],
+            "compute_fraction": round(r["compute_fraction"], 4),
+            "hbm_per_device_gib": data["hbm_per_device_gib"],
+            "model_vs_hlo_flops": (None if data.get("model_vs_hlo_flops")
+                                   is None
+                                   else round(data["model_vs_hlo_flops"], 3)),
+            "compile_s": data.get("compile_s"),
+        })
+    return out
+
+
+def summary():
+    rs = [r for r in rows() if "skipped" not in r]
+    if not rs:
+        return [{"note": "no dry-run artifacts yet; run "
+                 "`python -m repro.launch.dryrun --all`"}]
+    dominant = {}
+    for r in rs:
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    worst = min(rs, key=lambda r: r["compute_fraction"])
+    return [{
+        "cells": len(rs),
+        "dominant_counts": dominant,
+        "worst_cell": f"{worst['arch']}/{worst['shape']}",
+        "worst_compute_fraction": worst["compute_fraction"],
+    }]

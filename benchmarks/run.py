@@ -1,0 +1,56 @@
+"""Benchmark driver: one section per paper table + roofline + microbench.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract):
+simulator latencies are reported in us; `derived` carries the row's full
+dict for human inspection.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _emit(name: str, us, derived):
+    d = json.dumps(derived, default=str).replace(",", ";")
+    print(f"{name},{us},{d}")
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import microbench, optimality, roofline, tables
+
+    sections = {
+        "table_vi": tables.table_vi,
+        "table_vii": tables.table_vii,
+        "table_ix": tables.table_ix,
+        "table_x": tables.table_x,
+        "table_xi": tables.table_xi,
+        "batching": tables.batching,
+        "optimality_89_of_95": lambda: optimality.run(95),
+        "roofline": roofline.rows,
+        "roofline_summary": roofline.summary,
+        "microbench": microbench.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if only and only != name:
+            continue
+        try:
+            rows = fn()
+        except Exception as e:  # report, keep the harness going
+            _emit(name, "", {"error": f"{type(e).__name__}: {e}"})
+            continue
+        for i, row in enumerate(rows):
+            us = row.get("us_per_call")
+            if us is None:
+                for key in ("s2m3_s", "latency_s", "inference_s",
+                            "latency_shared_s", "roofline_s", "t_compute_s"):
+                    if row.get(key) is not None:
+                        us = round(float(row[key]) * 1e6, 1)
+                        break
+            _emit(f"{name}[{i}]", "" if us is None else us, row)
+
+
+if __name__ == "__main__":
+    main()

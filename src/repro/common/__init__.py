@@ -1,0 +1,1 @@
+"""Shared substrate: configs, sharding rules, pytree helpers, roofline math."""

@@ -1,0 +1,254 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+lax.scan-over-layers program under-reports flops/bytes/collectives by
+the trip count.  Fully unrolling for the dry-run is not compileable for
+the 126-layer x 512-device giants (>30 min), so instead we parse the
+optimized HLO: every while op carries ``backend_config=
+{"known_trip_count":{"n":...}}`` and we multiply callee costs through
+the call graph (fusion/call/while/conditional).
+
+Counted:
+* flops      — MXU work: dot ops (2 * prod(out) * contracted), the
+               roofline-relevant number (elementwise flops excluded —
+               they ride the memory term);
+* bytes      — traffic model: per (post-fusion) instruction, operand
+               bytes + output bytes, fusions opaque (their internal
+               traffic is on-chip by construction);
+* collectives — output-shape bytes per op kind, async -start counted
+               once, with loop multipliers applied.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_text: str
+    rest: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.out_text)
+
+
+@dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+    dot_flops_by_shape: dict = field(default_factory=dict)
+    n_whiles: int = 0
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self._parse(hlo_text)
+        self.entry = self._entry_name(hlo_text)
+        self._memo_flops: dict[str, float] = {}
+        self._memo_bytes: dict[str, float] = {}
+        self._memo_coll: dict[str, dict] = {}
+
+    # -- parsing ----------------------------------------------------------
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        cur_name = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HEADER_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur_name = m.group(1)
+                    cur = []
+                continue
+            if line.strip() == "}":
+                self.comps[cur_name] = cur
+                cur = None
+                continue
+            m = _ASSIGN_RE.match(line)
+            if m:
+                rhs = m.group(2)
+                mo = _OP_RE.search(rhs)
+                if mo:
+                    cur.append(Instr(m.group(1), mo.group(1),
+                                     rhs[: mo.start()], rhs[mo.end():]))
+
+    def _entry_name(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    # -- shape map ---------------------------------------------------------
+    def _shape_map(self, comp: str) -> dict[str, str]:
+        return {i.name: i.out_text for i in self.comps.get(comp, [])}
+
+    def _trip(self, ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.rest)
+        return int(m.group(1)) if m else 1
+
+    def _callees(self, ins: Instr) -> list[tuple[str, float]]:
+        """(computation, multiplier) call edges of one instruction."""
+        out = []
+        if ins.op == "while":
+            trip = self._trip(ins)
+            for kind, name in re.findall(
+                    r"(body|condition)=%?([\w.\-]+)", ins.rest):
+                out.append((name, float(trip) if kind == "body" else 1.0))
+            return out
+        if ins.op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "conditional", "custom-call",
+                      "select-and-scatter", "all-reduce", "reduce-scatter"):
+            for name in _CALLED_RE.findall(ins.rest):
+                out.append((name, 1.0))
+            m = _BRANCHES_RE.search(ins.rest)
+            if m:
+                for name in _OPERAND_RE.findall(m.group(1)):
+                    out.append((name, 1.0))
+        return out
+
+    # -- flops --------------------------------------------------------------
+    def _dot_flops(self, ins: Instr, shapes: dict[str, str]) -> float:
+        out_elems = 1
+        for _, dims in _shape_list(ins.out_text):
+            for d in dims:
+                out_elems *= d
+        # contracted extent from lhs shape + contracting dims
+        ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+        cd = _CDIMS_RE.search(ins.rest)
+        contracted = 1
+        if ops and cd and ops[0] in shapes:
+            lhs = _shape_list(shapes[ops[0]])
+            if lhs:
+                dims = lhs[0][1]
+                for idx in (int(x) for x in cd.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contracted *= dims[idx]
+        return 2.0 * out_elems * contracted
+
+    def flops(self, comp: str | None = None) -> float:
+        comp = comp or self.entry
+        if comp in self._memo_flops:
+            return self._memo_flops[comp]
+        self._memo_flops[comp] = 0.0   # cycle guard
+        shapes = self._shape_map(comp)
+        total = 0.0
+        for ins in self.comps.get(comp, []):
+            if ins.op == "dot":
+                total += self._dot_flops(ins, shapes)
+            elif ins.op == "convolution":
+                total += 2.0 * _shape_bytes(ins.out_text)   # rough; unused
+            for callee, mult in self._callees(ins):
+                total += mult * self.flops(callee)
+        self._memo_flops[comp] = total
+        return total
+
+    # -- bytes ---------------------------------------------------------------
+    def bytes(self, comp: str | None = None) -> float:
+        comp = comp or self.entry
+        if comp in self._memo_bytes:
+            return self._memo_bytes[comp]
+        self._memo_bytes[comp] = 0.0
+        shapes = self._shape_map(comp)
+        total = 0.0
+        for ins in self.comps.get(comp, []):
+            if ins.op not in _SKIP_BYTES_OPS:
+                total += ins.out_bytes
+                for op_name in _OPERAND_RE.findall(ins.rest.split(")")[0]):
+                    total += _shape_bytes(shapes.get(op_name, ""))
+            for callee, mult in self._callees(ins):
+                if ins.op in ("while", "call", "conditional"):
+                    total += mult * self.bytes(callee)
+        self._memo_bytes[comp] = total
+        return total
+
+    # -- collectives -----------------------------------------------------------
+    def collectives(self, comp: str | None = None) -> dict:
+        comp = comp or self.entry
+        if comp in self._memo_coll:
+            return self._memo_coll[comp]
+        self._memo_coll[comp] = {"bytes_by_op": {}, "count_by_op": {}}
+        bb, cb = {}, {}
+        for ins in self.comps.get(comp, []):
+            base = ins.op.removesuffix("-start")
+            if base in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                bb[base] = bb.get(base, 0.0) + ins.out_bytes
+                cb[base] = cb.get(base, 0.0) + 1
+            for callee, mult in self._callees(ins):
+                sub = self.collectives(callee)
+                for k, v in sub["bytes_by_op"].items():
+                    bb[k] = bb.get(k, 0.0) + mult * v
+                for k, v in sub["count_by_op"].items():
+                    cb[k] = cb.get(k, 0.0) + mult * v
+        out = {"bytes_by_op": bb, "count_by_op": cb}
+        self._memo_coll[comp] = out
+        return out
+
+    def report(self) -> CostReport:
+        coll = self.collectives()
+        return CostReport(
+            flops=self.flops(),
+            bytes=self.bytes(),
+            collective_bytes=sum(coll["bytes_by_op"].values()),
+            bytes_by_op=coll["bytes_by_op"],
+            count_by_op=coll["count_by_op"],
+        )
+
+
+def analyze(hlo_text: str) -> CostReport:
+    return HloCost(hlo_text).report()

@@ -1,0 +1,72 @@
+"""Hardware constants for roofline analysis.
+
+Target hardware is TPU v5e (per the assignment): these constants are the
+denominators of the three roofline terms.  The testbed simulator
+(core/profiles.py) carries its own per-device constants for the paper's
+edge hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bandwidth: float       # bytes/s per chip
+    hbm_bytes: float           # HBM capacity per chip
+    ici_bandwidth: float       # bytes/s per link
+    ici_links: int             # links per chip (2D torus: 4)
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,    # per assignment: 197 TFLOP/s bf16
+    hbm_bandwidth=819e9,       # 819 GB/s
+    hbm_bytes=16 * 1024**3,    # 16 GiB
+    ici_bandwidth=50e9,        # ~50 GB/s per link (assignment constant)
+    ici_links=4,
+)
+
+DEFAULT_CHIP = TPU_V5E
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+    chip: ChipSpec = DEFAULT_CHIP,
+    *,
+    per_device: bool = True,
+) -> dict:
+    """The three roofline terms in seconds.
+
+    ``per_device=True`` means the flops/bytes arguments were measured on the
+    partitioned (per-device) HLO module, which is what
+    ``compiled.cost_analysis()`` reports for an SPMD program; we therefore do
+    NOT divide by n_chips again.  Set ``per_device=False`` for whole-program
+    numbers.
+    """
+    div = 1.0 if per_device else float(n_chips)
+    t_comp = hlo_flops / div / chip.peak_flops_bf16
+    t_mem = hlo_bytes / div / chip.hbm_bandwidth
+    # Collectives move bytes over ICI; a chip in a 2D/3D torus drives
+    # ici_links links.  We charge collective bytes against the aggregate
+    # per-chip link bandwidth: conservative for ring-scheduled collectives.
+    t_coll = collective_bytes / div / (chip.ici_bandwidth * chip.ici_links)
+    dominant = max(
+        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_s": bound,
+        "compute_fraction": (t_comp / bound) if bound > 0 else 0.0,
+    }

@@ -1,0 +1,51 @@
+"""Pytree helpers: counting, casting, flattened paths."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_paths(tree) -> dict[str, object]:
+    """Flatten to {'a/b/c': leaf} using dict keys as path components."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-5) -> bool:
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(leaves_a) != len(leaves_b):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

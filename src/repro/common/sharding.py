@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules.
+
+Every weight / activation dimension carries a *logical* axis name
+("embed", "mlp", "heads", "batch", ...).  A rule table maps logical names
+to mesh axis names.  ``spec_for`` resolves a logical-axis tuple into a
+``PartitionSpec``, demoting any mesh axis whose size does not divide the
+corresponding dimension (demotion = replication: always correct, possibly
+wasteful — the roofline report surfaces the waste).
+
+This is the single knob surface for the perf hillclimb: a sharding
+*profile* is just a rule-table override.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Mesh axes in this codebase: ("pod", "data", "model") multi-pod,
+# ("data", "model") single pod.
+MeshAxes = tuple[str, ...] | str | None
+
+# Default rules: FSDP over (pod, data) for the embed dim, tensor
+# parallelism over "model" for heads / mlp / vocab / experts, batch data-
+# parallel over (pod, data), decode KV cache sequence-sharded over "model".
+DEFAULT_RULES: dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "vocab_out": "model",
+    # weights
+    "embed": ("pod", "data"),     # FSDP axis
+    "mlp": "model",
+    "heads": "model",
+    "qkv_features": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "norm": None,
+    "mla_rank": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "slstm_rec": None,
+    # kv cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq": "model",
+    "cache_heads": None,
+    "cache_feat": None,
+    # optimizer
+    "replicated": None,
+}
+
+
+def merge_rules(*overrides: Mapping[str, MeshAxes] | None) -> dict[str, MeshAxes]:
+    rules = dict(DEFAULT_RULES)
+    for ov in overrides:
+        if ov:
+            rules.update(ov)
+    return rules
+
+
+def _axes_present(entry: MeshAxes, mesh: Mesh) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        entry = (entry,)
+    return tuple(a for a in entry if a in mesh.shape)
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical_axes: Sequence[str | None],
+    rules: Mapping[str, MeshAxes],
+    mesh: Mesh,
+) -> P:
+    """Resolve logical axes into a PartitionSpec valid for `shape` on `mesh`.
+
+    Per-dimension, mesh axes are kept only while the running product still
+    divides the dimension size (prefix demotion), and an axis is never used
+    twice in one spec.
+    """
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        entry = rules.get(name, None)
+        axes = _axes_present(entry, mesh)
+        kept: list[str] = []
+        prod = 1
+        for a in axes:
+            if a in used:
+                continue
+            sz = mesh.shape[a]
+            if dim % (prod * sz) == 0:
+                kept.append(a)
+                prod *= sz
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def sharding_for(shape, logical_axes, rules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical_axes, rules, mesh))
+
+
+def tree_pspecs(spec_tree, rules, mesh: Mesh):
+    """Map a WSpec pytree (see layers.initializers) to PartitionSpecs."""
+    from repro.layers.initializers import WSpec  # local import, avoids cycle
+
+    def one(ws):
+        if isinstance(ws, WSpec):
+            return spec_for(ws.shape, ws.axes, rules, mesh)
+        raise TypeError(f"expected WSpec, got {type(ws)}")
+
+    return jax.tree.map(one, spec_tree, is_leaf=lambda x: isinstance(x, WSpec))
+
+
+def tree_shardings(spec_tree, rules, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree_pspecs(spec_tree, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def local_mesh(shape: tuple[int, ...] = (1, 1), axes: tuple[str, ...] = ("data", "model")) -> Mesh:
+    """A trivial mesh on the current devices — used by smoke tests/benches."""
+    devs = jax.devices()[: math.prod(shape)]
+    import numpy as np
+
+    return Mesh(np.asarray(devs).reshape(shape), axes)

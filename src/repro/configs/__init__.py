@@ -1,0 +1,15 @@
+"""Architecture config registry: importing this package registers all archs."""
+
+from repro.configs import (  # noqa: F401
+    deepseek_v3_671b,
+    gemma2_9b,
+    granite_moe_3b_a800m,
+    internvl2_1b,
+    llama3_405b,
+    llama3_8b,
+    tinyllama_1_1b,
+    whisper_tiny,
+    xlstm_1_3b,
+    zamba2_7b,
+)
+from repro.configs import s2m3_zoo  # noqa: F401  (the paper's own 14-model zoo)

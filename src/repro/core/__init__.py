@@ -1,0 +1,15 @@
+"""S2M3 core: split-and-share module model, placement, routing.
+
+This package is the paper's contribution:
+  module.py    — functional-level modules & model decomposition (§IV-A)
+  registry.py  — cross-task module sharing / dedup (§IV-B)
+  cluster.py   — device pool + link model (testbed or TPU sub-meshes)
+  placement.py — greedy Algorithm 1, brute-force Upper, baselines (§V-B)
+  routing.py   — per-request parallel routing + event simulator (§V)
+  profiles.py  — the paper's testbed calibration (Tables III/V/VI/VII)
+  zoo.py       — the 14-model zoo as ModelSpecs + assigned-arch adapters
+  tpu.py       — S2M3 on a TPU pod: sub-mesh devices, roofline t_comp
+"""
+
+from repro.core.module import ModelSpec, ModuleSpec  # noqa: F401
+from repro.core.registry import ModuleRegistry  # noqa: F401

@@ -1,0 +1,98 @@
+"""S2M3 on a TPU pod: sub-meshes as devices, roofline-derived t_comp.
+
+The pod mesh is partitioned into sub-meshes; each sub-mesh is a
+``DeviceSpec`` whose memory is its aggregate HBM and whose compute model
+comes from the three-term roofline (common/hw.py) rather than wall-clock
+measurement.  The same greedy placement / parallel routing then runs
+unchanged — that is the point: the paper's algorithms are
+measurement-agnostic.
+
+Module compute estimates use the dry-run's cost-analysis when artifacts
+exist (results/dryrun/*.json), falling back to analytic 2·N·tokens.
+ICI links between sub-meshes are modeled at the assignment's constant.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from dataclasses import dataclass
+
+from repro.common.hw import DEFAULT_CHIP, ChipSpec
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.module import ModuleSpec
+
+ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclass(frozen=True)
+class SubMesh:
+    name: str
+    n_chips: int
+    chip: ChipSpec = DEFAULT_CHIP
+
+    @property
+    def hbm_bytes(self) -> int:
+        return int(self.n_chips * self.chip.hbm_bytes)
+
+    @property
+    def flops(self) -> float:
+        return self.n_chips * self.chip.peak_flops_bf16
+
+
+def pod_cluster(
+    partitions: list[int],
+    *,
+    chip: ChipSpec = DEFAULT_CHIP,
+    mfu: float = 0.4,
+) -> ClusterSpec:
+    """Partition a pod into sub-meshes, e.g. [64, 64, 64, 64] for a 256-chip
+    pod split four ways.  ``mfu`` discounts peak FLOP/s to a realistic
+    serving efficiency for the fallback compute model."""
+    devices = []
+    links = {}
+    for i, n in enumerate(partitions):
+        sm = SubMesh(f"submesh{i}x{n}", n, chip)
+        devices.append(DeviceSpec(
+            name=sm.name, mem_capacity=sm.hbm_bytes,
+            compute_speed=sm.flops * mfu, kind="submesh"))
+    # ICI between adjacent sub-meshes: boundary links of the torus slice.
+    for i in range(len(partitions)):
+        for j in range(i + 1, len(partitions)):
+            boundary = int(math.sqrt(min(partitions[i], partitions[j])))
+            bw = boundary * chip.ici_bandwidth
+            a, b = devices[i].name, devices[j].name
+            links[(a, b)] = (bw, 1e-5)
+    return ClusterSpec(devices=devices, links=links,
+                       default_bandwidth=chip.ici_bandwidth,
+                       default_latency=1e-5)
+
+
+def roofline_t_comp(module: ModuleSpec, n_chips: int,
+                    chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """max(compute, memory) term for one query on an n-chip sub-mesh."""
+    flops = module.flops_per_query
+    byts = module.mem_bytes          # weights stream once per query (bs=1)
+    t_comp = flops / (n_chips * chip.peak_flops_bf16)
+    t_mem = byts / (n_chips * chip.hbm_bandwidth)
+    return max(t_comp, t_mem)
+
+
+def install_roofline_profile(cluster: ClusterSpec, modules,
+                             chip: ChipSpec = DEFAULT_CHIP) -> ClusterSpec:
+    chips_of = {d.name: int(d.name.rsplit("x", 1)[1]) for d in cluster.devices}
+    for m in modules:
+        for d in cluster.devices:
+            cluster.comp_table[(m.name, d.name)] = roofline_t_comp(
+                m, chips_of[d.name], chip)
+    return cluster
+
+
+def load_dryrun_t_comp(arch: str, shape: str, mesh: str = "pod16x16"):
+    """Roofline seconds from a dry-run artifact, if present."""
+    f = ARTIFACT_DIR / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    data = json.loads(f.read_text())
+    return data.get("roofline", {}).get("roofline_s")

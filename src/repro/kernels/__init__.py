@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+flash_attention — fused streaming-softmax attention (train/prefill);
+decode_attention — single-query attention over a long KV cache;
+ssd_scan — Mamba2 intra-chunk SSD block.
+
+Each kernel ships with a jit wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes in interpret=True mode (this box is
+CPU-only; TPU is the compile target).
+"""

@@ -1,0 +1,111 @@
+"""Decode (single-query) attention over a long KV cache — flash-decoding
+style streaming softmax over key blocks, masked by per-sequence lengths.
+
+Grid = (B*H, kv_blocks); one query row per program, KV streamed through
+VMEM in (block_k, D) tiles.  Lengths arrive as a scalar-prefetch operand
+(SMEM) so masking needs no extra HBM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, softcap, bk, n_kv_blocks, n_heads):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (1, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bk, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (1, bk)
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = len_ref[bh // n_heads]
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    safe = m_new > NEG_INF / 2
+    p = jnp.exp(s - jnp.where(safe, m_new, 0.0)[:, None])
+    p = jnp.where(k_pos < length, p, 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2,
+                      jnp.exp(m_prev - jnp.where(safe, m_new, 0.0)), 0.0)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "block_k", "interpret"))
+def decode_attention(
+    q, k, v, lengths, *,
+    softcap: float = 0.0,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """q: (B,H,D); k/v: (B,T,K,D); lengths: (B,) ints. Returns (B,H,D)."""
+    B, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bk = min(block_k, T)
+    assert T % bk == 0
+    n_kv = T // bk
+    scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * H, 1, D)
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, bk=bk, n_kv_blocks=n_kv,
+        n_heads=H)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda bh, j, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda bh, j, *_, G=G, H=H: (bh // H, j, (bh % H) // G, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda bh, j, *_, G=G, H=H: (bh // H, j, (bh % H) // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, j, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, k, v)
+    return out.reshape(B, H, D)

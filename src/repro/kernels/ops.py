@@ -1,0 +1,51 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret=True`` executes kernel bodies in Python on CPU (the
+validation mode on this box); on TPU pass interpret=False (default) for
+the compiled Mosaic path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_chunked as _ssd_chunked
+from repro.kernels.ssd_scan import ssd_intra_chunk as _ssd_intra
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=256, block_k=256, interpret=False):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def decode_attention(q, k, v, lengths, *, softcap=0.0, block_k=512,
+                     interpret=False):
+    return _decode(q, k, v, lengths, softcap=softcap, block_k=block_k,
+                   interpret=interpret)
+
+
+def ssd_chunked(x, Bm, Cm, dt, A_log, *, chunk=128, initial_state=None,
+                interpret=False):
+    """Unchunked interface: x (B,S,H,P), Bm/Cm (B,S,N), dt (B,S,H)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    y, final = _ssd_chunked(
+        x.reshape(B, nc, L, H, P), Bm.reshape(B, nc, L, N),
+        Cm.reshape(B, nc, L, N), dt.reshape(B, nc, L, H), A_log,
+        initial_state=initial_state, interpret=interpret)
+    return y.reshape(B, S, H, P), final
+
+
+ssd_intra_chunk = _ssd_intra
+
+
+def slstm_scan(pre, R, *, block_s=128, interpret=False):
+    from repro.kernels.slstm_scan import slstm_scan as _s
+
+    return _s(pre, R, block_s=block_s, interpret=interpret)

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        lengths=None):
+    """q: (B,S,H,D); k/v: (B,T,K,D). Plain softmax attention."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window and window > 0:
+        mask &= kp > qp - window
+    mask = jnp.broadcast_to(mask[None, None], (B, H, S, T))
+    if lengths is not None:
+        mask &= (kp[None, None] < lengths[:, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with every key masked produce 0 (matches streaming kernel)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, softcap=0.0):
+    """q: (B,H,D) single query at position lengths-1 (inclusive cache);
+    k/v: (B,T,K,D); lengths: (B,) valid key count."""
+    out = flash_attention_ref(
+        q[:, None], k, v, causal=False, softcap=softcap, lengths=lengths)
+    return out[:, 0]
+
+
+def ssd_chunk_ref(x, Bm, Cm, dt, A_log, *, initial_state=None):
+    """Naive per-step SSD recurrence (no D skip, no conv — pure cell).
+
+    x: (B,S,H,P); Bm/Cm: (B,S,N); dt: (B,S,H) post-softplus.
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(s, inp):
+        x_t, B_t, C_t, dt_t = inp
+        decay = jnp.exp(dt_t * a)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", B_t, dt_t, x_t)
+        s = s * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_t, s)
+        return s, y
+
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (x, Bm, Cm, dt))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def slstm_cell_ref(pre, R):
+    """Oracle for kernels.slstm_scan: pre (B,S,4,d), R (4,H,hd,hd)."""
+    B, S, _, d = pre.shape
+    _, H, hd, _ = R.shape
+    Rf = R.astype(jnp.float32)
+
+    def step(carry, p_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = [
+            jnp.einsum("bhd,hde->bhe", hh, Rf[g]).reshape(B, d)
+            for g in range(4)
+        ]
+        gi = p_t[:, 0] + rec[0]
+        gf = p_t[:, 1] + rec[1]
+        gz = jnp.tanh(p_t[:, 2] + rec[2])
+        go = jax.nn.sigmoid(p_t[:, 3] + rec[3])
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(gi - m_new)
+        c = fp * c + ip * gz
+        n = fp * n + ip
+        h = go * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    zeros = jnp.zeros((B, d), jnp.float32)
+    carry = (zeros, zeros + 1e-6, zeros, zeros)
+    _, hs = jax.lax.scan(step, carry, jnp.moveaxis(pre.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(pre.dtype)

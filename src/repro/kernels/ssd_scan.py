@@ -1,0 +1,131 @@
+"""Mamba2 SSD intra-chunk kernel.
+
+Per (batch, chunk, head) program: builds the causal decay-weighted score
+matrix M[t,s] = C_t·B_s · exp(cum_t - cum_s) · dt_s in VMEM, produces
+the intra-chunk output Y = M @ X and the chunk's outgoing state
+S_loc = Σ_s exp(cum_L - cum_s)·dt_s·(B_s ⊗ x_s) — the two quantities the
+host-level associative scan (inter-chunk) consumes.  This is the tile
+the pure-XLA path materializes at (B, nc, L, L, H) fp32; the kernel
+keeps it at (L, L) per program in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, B_ref, C_ref, dt_ref, alog_ref, y_ref, s_ref, *, L):
+    h = pl.program_id(2)
+    x = x_ref[0, 0, 0].astype(jnp.float32)     # (L, P)
+    Bm = B_ref[0, 0].astype(jnp.float32)       # (L, N)
+    Cm = C_ref[0, 0].astype(jnp.float32)       # (L, N)
+    dt = dt_ref[0, 0, 0, :, 0].astype(jnp.float32)  # (L,)
+    a = -jnp.exp(alog_ref[h].astype(jnp.float32))  # scalar
+
+    dA = dt * a                                 # (L,) log decays
+    cum = jnp.cumsum(dA)                        # (L,)
+
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L,L) t,s
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    M = jnp.where(s_pos <= t_pos, G * decay * dt[None, :], 0.0)
+
+    y_ref[0, 0, 0] = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    w_end = jnp.exp(cum[-1] - cum) * dt         # (L,)
+    s_ref[0, 0, 0] = jax.lax.dot_general(
+        Bm * w_end[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)  # (N, P)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, Bm, Cm, dt, A_log, *, interpret: bool = False):
+    """x: (B,nc,L,H,P); Bm/Cm: (B,nc,L,N); dt: (B,nc,L,H) post-softplus.
+
+    Returns (y_intra (B,nc,L,H,P) f32, S_loc (B,nc,H,N,P) f32,
+             Lam (B,nc,H) f32 chunk decay) — inputs to the host-level
+    inter-chunk associative scan.
+    """
+    B, nc, L, H, P = x.shape
+    N = Bm.shape[-1]
+
+    xt = x.transpose(0, 1, 3, 2, 4)            # (B,nc,H,L,P)
+    dtt = dt.transpose(0, 1, 3, 2)[..., None]  # (B,nc,H,L,1)
+
+    kernel = functools.partial(_kernel, L=L)
+    y, s_loc = pl.pallas_call(
+        kernel,
+        grid=(B * nc, 1, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, N),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, 0, 0)),
+            pl.BlockSpec((1, 1, L, N),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, 1),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, P),
+                         lambda bc, _, h, nc=nc: (bc // nc, bc % nc, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, H, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt.reshape(B, nc, H, L, P), Bm, Cm, dtt.reshape(B, nc, H, L, 1), A_log)
+
+    dA = dt.astype(jnp.float32) * (-jnp.exp(A_log.astype(jnp.float32)))
+    Lam = jnp.exp(dA.sum(axis=2))              # (B,nc,H)
+    return y.transpose(0, 1, 3, 2, 4), s_loc, Lam
+
+
+def ssd_chunked(x, Bm, Cm, dt, A_log, *, initial_state=None,
+                interpret: bool = False):
+    """Full SSD: Pallas intra-chunk + jnp inter-chunk associative scan.
+
+    Same contract as kernels.ref.ssd_chunk_ref but chunked inputs:
+    x (B,nc,L,H,P) etc.  Returns (y (B,nc,L,H,P), final (B,H,N,P)).
+    """
+    B, nc, L, H, P = x.shape
+    y_intra, S_loc, Lam = ssd_intra_chunk(x, Bm, Cm, dt, A_log,
+                                          interpret=interpret)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    Lam_s = jnp.moveaxis(Lam, 1, 0)
+    S_s = jnp.moveaxis(S_loc, 1, 0)
+    if initial_state is not None:
+        Lam_s = jnp.concatenate([jnp.ones_like(Lam_s[:1]), Lam_s], 0)
+        S_s = jnp.concatenate([initial_state.astype(jnp.float32)[None], S_s], 0)
+    accA, accS = jax.lax.associative_scan(combine, (Lam_s, S_s), axis=0)
+    if initial_state is not None:
+        S_before = jnp.moveaxis(accS[:-1], 0, 1)
+        final = accS[-1]
+    else:
+        S_before = jnp.moveaxis(
+            jnp.concatenate([jnp.zeros_like(accS[:1]), accS[:-1]], 0), 0, 1)
+        final = accS[-1]
+
+    dA = dt.astype(jnp.float32) * (-jnp.exp(A_log.astype(jnp.float32)))
+    cum = jnp.cumsum(dA, axis=2)
+    y_inter = jnp.einsum("bcln,bchnp,bclh->bclhp",
+                         Cm.astype(jnp.float32), S_before, jnp.exp(cum))
+    return (y_intra + y_inter).astype(x.dtype), final

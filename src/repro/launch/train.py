@@ -1,0 +1,104 @@
+"""Training launcher.
+
+Single-host:   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+                   --smoke --steps 50
+Multi-host:    same command per host with JAX_COORDINATOR/JAX_PROCESS_ID etc.
+               (jax.distributed.initialize is called when JAX_NUM_PROCESSES
+               is set); the data pipeline shards by process automatically.
+
+Production notes (1000+ nodes):
+* XLA latency-hiding scheduler overlaps the gradient reduce-scatter with
+  the backward pass: set
+  XLA_FLAGS="--xla_tpu_enable_latency_hiding_scheduler=true" on TPU.
+* Fault tolerance: checkpoints are atomic; on restart the loop resumes
+  from the last COMMITTED step (see training/checkpoint.py).
+* Elastic scaling: on pool change re-invoke with the new topology; the
+  S2M3 placement replans with migration-minimal deltas
+  (core/placement.replan).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--data", default="", help="token .bin file (synthetic "
+                    "corpus if empty)")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_NUM_PROCESSES"):
+        import jax
+
+        jax.distributed.initialize()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common.config import TrainConfig, get_config
+    from repro.models.api import build_model
+    from repro.training import checkpoint as ckpt
+    from repro.training.data import DataConfig, TokenStream
+    from repro.training.optimizer import init_state
+    from repro.training.train_step import make_train_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    bundle = build_model(cfg, compute_dtype=jnp.float32, remat=args.remat)
+    print(f"[train] {cfg.name} params={bundle.param_count():,} "
+          f"procs={jax.process_count()}")
+
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       total_steps=args.steps, remat=args.remat,
+                       microbatches=args.microbatches)
+    state = init_state(bundle.init(jax.random.PRNGKey(0)), tcfg)
+    ckdir = pathlib.Path(args.ckpt or f"/tmp/repro_train/{cfg.name}")
+    if ckpt.latest_step(ckdir) is not None:
+        state = ckpt.restore(state, ckdir,
+                             process_index=jax.process_index())
+        print(f"[train] resumed from step {int(state['step'])}")
+
+    extra = {}
+    if cfg.has_vision_stub:
+        extra["image_embeds"] = ((cfg.n_image_tokens, cfg.d_model), "float32")
+    if cfg.is_encoder_decoder:
+        extra["audio_frames"] = ((cfg.encoder_seq, cfg.d_model), "float32")
+    data = TokenStream(DataConfig(
+        seq_len=args.seq, global_batch=args.batch,
+        vocab_size=cfg.vocab_size, path=args.data or None,
+        process_index=jax.process_index(),
+        process_count=jax.process_count()), extra_features=extra)
+
+    step_fn = jax.jit(make_train_step(bundle, tcfg), donate_argnums=(0,))
+    t0 = time.time()
+    start = int(state["step"])
+    for i, batch in zip(range(start, args.steps), data):
+        state, metrics = step_fn(state, {k: jnp.asarray(v)
+                                         for k, v in batch.items()})
+        if (i + 1) % 10 == 0:
+            print(f"[train] step {i+1} loss={float(metrics['loss']):.4f} "
+                  f"({(time.time()-t0)/(i+1-start):.2f}s/step)")
+        if (i + 1) % args.ckpt_every == 0:
+            ckpt.save_async(state, ckdir, step=i + 1,
+                            process_index=jax.process_index())
+    ckpt.save(state, ckdir, step=int(state["step"]),
+              process_index=jax.process_index())
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

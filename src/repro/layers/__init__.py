@@ -1,0 +1,1 @@
+"""Layer library: declarative weight specs + pure-functional apply fns."""

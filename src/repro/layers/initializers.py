@@ -1,0 +1,99 @@
+"""Declarative weight specs.
+
+A layer declares its weights once as a pytree of ``WSpec``; the same tree
+drives initialization, abstract evaluation (ShapeDtypeStruct for the
+dry-run) and PartitionSpec derivation (via common.sharding.tree_pspecs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis names (or None), len == ndim
+    init: str = "normal"             # normal | zeros | ones | embed | small
+    scale: float | None = None       # stddev override for "normal"
+    dtype: Any = None                # None -> param_dtype at init time
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_wspec(x) -> bool:
+    return isinstance(x, WSpec)
+
+
+def _std(ws: WSpec) -> float:
+    if ws.scale is not None:
+        return ws.scale
+    if ws.init == "embed":
+        return 1.0
+    if ws.init == "small":
+        return 0.02
+    # fan-in normal
+    fan_in = int(np.prod(ws.shape[:-1])) or 1
+    return 1.0 / float(np.sqrt(fan_in))
+
+
+def init_leaf(key, ws: WSpec, param_dtype) -> jax.Array:
+    dtype = ws.dtype or param_dtype
+    if ws.init == "zeros":
+        return jnp.zeros(ws.shape, dtype)
+    if ws.init == "ones":
+        return jnp.ones(ws.shape, dtype)
+    return (jax.random.normal(key, ws.shape, jnp.float32) * _std(ws)).astype(dtype)
+
+
+def init_tree(key, spec_tree, param_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_wspec)
+    out = [
+        init_leaf(jax.random.fold_in(key, i), ws, param_dtype)
+        for i, ws in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(spec_tree, param_dtype=jnp.float32, shardings=None):
+    """ShapeDtypeStruct pytree; if `shardings` pytree given, attach them."""
+
+    def one(ws, sh=None):
+        dtype = ws.dtype or param_dtype
+        if sh is not None:
+            return jax.ShapeDtypeStruct(ws.shape, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(ws.shape, dtype)
+
+    if shardings is None:
+        return jax.tree.map(one, spec_tree, is_leaf=_is_wspec)
+    return jax.tree.map(one, spec_tree, shardings, is_leaf=_is_wspec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Prepend a scanned-layers dimension (logical axis "layers")."""
+    return jax.tree.map(
+        lambda ws: replace(ws, shape=(n, *ws.shape), axes=("layers", *ws.axes)),
+        spec_tree,
+        is_leaf=_is_wspec,
+    )
+
+
+def spec_param_count(spec_tree) -> int:
+    return sum(
+        int(np.prod(ws.shape))
+        for ws in jax.tree.leaves(spec_tree, is_leaf=_is_wspec)
+    )
+
+
+def spec_param_bytes(spec_tree, param_dtype=jnp.bfloat16) -> int:
+    total = 0
+    for ws in jax.tree.leaves(spec_tree, is_leaf=_is_wspec):
+        dt = ws.dtype or param_dtype
+        total += int(np.prod(ws.shape)) * jnp.dtype(dt).itemsize
+    return total

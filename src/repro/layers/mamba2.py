@@ -1,0 +1,204 @@
+"""Mamba2 (State-Space Duality) block.
+
+Chunkwise-parallel SSD for train/prefill (linear in sequence length) and
+an O(1) recurrent step for decode.  ``ssd_recurrent_ref`` is the naive
+per-step oracle used by tests.  A Pallas kernel for the intra-chunk part
+lives in repro.kernels.ssd_scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.initializers import WSpec
+from repro.layers.norms import apply_norm, norm_specs
+
+
+def mamba2_dims(cfg):
+    d_in = cfg.mamba_expand * cfg.d_model
+    n_heads = d_in // cfg.mamba_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def mamba2_specs(cfg):
+    d_in, H, N = mamba2_dims(cfg)
+    W = cfg.mamba_conv_width
+    return {
+        "wz": WSpec((cfg.d_model, d_in), ("embed", "ssm_inner")),
+        "wx": WSpec((cfg.d_model, d_in), ("embed", "ssm_inner")),
+        "wB": WSpec((cfg.d_model, N), ("embed", "ssm_state")),
+        "wC": WSpec((cfg.d_model, N), ("embed", "ssm_state")),
+        "wdt": WSpec((cfg.d_model, H), ("embed", "ssm_heads")),
+        "conv_x": WSpec((W, d_in), (None, "ssm_inner")),
+        "conv_B": WSpec((W, N), (None, "ssm_state")),
+        "conv_C": WSpec((W, N), (None, "ssm_state")),
+        "A_log": WSpec((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": WSpec((H,), ("ssm_heads",), init="zeros"),
+        "D_skip": WSpec((H,), ("ssm_heads",), init="ones"),
+        "out_norm": norm_specs(d_in),
+        "w_out": WSpec((d_in, cfg.d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C), w: (W, C).
+
+    With `state` (B, W-1, C) the conv continues from cached history and the
+    new state is returned.
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1) :, :]
+    return out, new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A_log, D_skip, chunk: int, initial_state=None):
+    """Chunkwise SSD.
+
+    xh: (B, S, H, P); Bm/Cm: (B, S, N); dt: (B, S, H) (post-softplus).
+    Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    if S % L:  # pad tail: dt=0 -> decay 1, update 0 (state-neutral)
+        pad = L - S % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        out, final = _ssd_chunked(xh, Bm, Cm, dt, A_log, D_skip, chunk,
+                                  initial_state)
+        return out[:, :S], final
+    nc = S // L
+
+    a = -jnp.exp(A_log.astype(jnp.float32))            # (H,) negative
+    dA = dt.astype(jnp.float32) * a                     # (B,S,H) log decay <=0
+
+    xc = xh.reshape(Bsz, nc, L, H, Pd).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    dAc = dA.reshape(Bsz, nc, L, H)
+
+    cum = jnp.cumsum(dAc, axis=2)                       # (B,nc,L,H)
+
+    # intra-chunk: scores[s->t] = C_t.B_s * exp(cum_t - cum_s) * dt_s, s<=t
+    G = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)           # (B,nc,L,L) t=l, s=m
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(causal[None, None, :, :, None], G[..., None] * decay, 0.0)
+    xdt = xc * dtc[..., None]                            # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xdt)
+
+    # per-chunk end state: S_c = sum_s exp(cum_L - cum_s) dt_s B_s x_s
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,L,H)
+    S_loc = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, w_end * dtc, xc)
+
+    # inter-chunk recurrence over c: S_run = S_prev * Lam_c + S_loc_c
+    Lam = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    Lam_s = jnp.moveaxis(Lam, 1, 0)                      # (nc,B,H)
+    S_s = jnp.moveaxis(S_loc, 1, 0)                      # (nc,B,H,N,P)
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)
+        Lam_s = jnp.concatenate([jnp.ones_like(Lam_s[:1]), Lam_s], 0)
+        S_s = jnp.concatenate([init[None], S_s], 0)
+    accA, accS = jax.lax.associative_scan(combine, (Lam_s, S_s), axis=0)
+    if initial_state is not None:
+        accS_states = accS                                # (nc+1,...) state AFTER chunk c-1
+        S_before = accS_states[:-1]
+        final = accS_states[-1]
+    else:
+        S_before = jnp.concatenate([jnp.zeros_like(accS[:1]), accS[:-1]], 0)
+        final = accS[-1]
+    S_before = jnp.moveaxis(S_before, 0, 1)              # (B,nc,H,N,P)
+
+    # inter-chunk output: y_t += C_t . S_before * exp(cum_t)
+    y_inter = jnp.einsum(
+        "bcln,bchnp,bclh->bclhp", Cc, S_before, jnp.exp(cum)
+    )
+
+    y = y_intra + y_inter + xc * D_skip.astype(jnp.float32)[None, None, None, :, None]
+    return y.reshape(Bsz, S, H, Pd).astype(xh.dtype), final
+
+
+def ssd_recurrent_ref(xh, Bm, Cm, dt, A_log, D_skip, initial_state=None):
+    """Naive per-step oracle: s = s*exp(dt*a) + dt * B (x) ; y = C.s + D*x."""
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(s, inp):
+        x_t, B_t, C_t, dt_t = inp
+        decay = jnp.exp(dt_t * a)                        # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", B_t, dt_t, x_t)
+        s = s * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_t, s) + x_t * D_skip[None, :, None]
+        return s, y
+
+    s0 = (jnp.zeros((Bsz, H, N, Pd), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    xs = (
+        jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), final
+
+
+def mamba2_apply(params, x, cfg, *, state=None, impl: str = "chunked"):
+    """Full block body.  x: (B, S, d_model).
+
+    state: None (fresh) or dict(ssm=(B,H,N,P), conv_x/conv_B/conv_C).
+    Returns (y, new_state).
+    """
+    d_in, H, N = mamba2_dims(cfg)
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt_))
+    xr = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt_))
+    Br = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt_))
+    Cr = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt_))
+    dtl = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))
+
+    cs = state or {}
+    xc, ns_x = _causal_conv(xr, params["conv_x"].astype(dt_), cs.get("conv_x"))
+    Bc, ns_B = _causal_conv(Br, params["conv_B"].astype(dt_), cs.get("conv_B"))
+    Cc, ns_C = _causal_conv(Cr, params["conv_C"].astype(dt_), cs.get("conv_C"))
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    dt_soft = jax.nn.softplus(
+        dtl.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    xh = xc.reshape(*xc.shape[:2], H, cfg.mamba_head_dim)
+
+    init_ssm = cs.get("ssm")
+    if impl == "recurrent" or x.shape[1] == 1:
+        y, final = ssd_recurrent_ref(
+            xh, Bc, Cc, dt_soft, params["A_log"], params["D_skip"].astype(jnp.float32),
+            initial_state=init_ssm,
+        )
+    else:
+        y, final = _ssd_chunked(
+            xh, Bc, Cc, dt_soft, params["A_log"], params["D_skip"].astype(jnp.float32),
+            cfg.mamba_chunk, initial_state=init_ssm,
+        )
+
+    y = y.reshape(*x.shape[:2], d_in)
+    y = apply_norm(params["out_norm"], y * jax.nn.silu(z), cfg.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    new_state = {"ssm": final, "conv_x": ns_x, "conv_B": ns_B, "conv_C": ns_C}
+    return out, new_state

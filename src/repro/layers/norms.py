@@ -1,0 +1,27 @@
+"""RMSNorm / LayerNorm."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.layers.initializers import WSpec
+
+
+def norm_specs(d: int, kind: str = "rmsnorm"):
+    specs = {"scale": WSpec((d,), ("norm",), init="ones")}
+    if kind == "layernorm":
+        specs["bias"] = WSpec((d,), ("norm",), init="zeros")
+    return specs
+
+
+def apply_norm(params, x, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * (jnp.mean(xf * xf, -1, keepdims=True) + eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * (var + eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

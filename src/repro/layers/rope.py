@@ -1,0 +1,23 @@
+"""Rotary position embeddings (half-rotation layout, LLaMA-style)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float):
+    exponent = jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    return 1.0 / (theta ** exponent)  # (dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim) or (..., seq, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    inv = rope_freqs(dim, theta)                       # (dim/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, dim/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                   # heads axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,271 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM is a matrix-memory cell with exponential gating; we implement the
+standard stabilized chunkwise form (linear in sequence length) for
+train/prefill and an O(1) step for decode.  sLSTM has memory mixing and
+cannot be parallelized over time — it runs as a lax.scan (the paper's own
+characterization).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.initializers import WSpec
+from repro.layers.norms import apply_norm, norm_specs
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_in = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+def mlstm_specs(cfg):
+    d, (d_in, H, hd) = cfg.d_model, mlstm_dims(cfg)
+    return {
+        "ln": norm_specs(d, cfg.norm),
+        "w_up": WSpec((d, d_in), ("embed", "ssm_inner")),
+        "w_gate": WSpec((d, d_in), ("embed", "ssm_inner")),
+        "wq": WSpec((d_in, d_in), ("ssm_inner", None)),
+        "wk": WSpec((d_in, d_in), ("ssm_inner", None)),
+        "wv": WSpec((d_in, d_in), ("ssm_inner", None)),
+        "wi": WSpec((d_in, H), ("ssm_inner", "ssm_heads"), init="small"),
+        "wf": WSpec((d_in, H), ("ssm_inner", "ssm_heads"), init="small"),
+        "b_i": WSpec((H,), ("ssm_heads",), init="zeros"),
+        "b_f": WSpec((H,), ("ssm_heads",), init="ones"),
+        "out_norm": norm_specs(d_in),
+        "w_down": WSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_log, f_log, chunk: int, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,D); i_log,f_log: (B,S,H) log-space gates.
+    state: (C (B,H,D,D), n (B,H,D), m (B,H)) or None.
+    Returns (h (B,S,H,D), state').
+    """
+    B, S, H, D = q.shape
+    L = min(chunk, S)
+    if S % L:  # pad tail: i_log=-inf, f_log=0 (state-neutral)
+        pad = L - S % L
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+        out, st = _mlstm_chunked(q, k, v, i_log, f_log, chunk, state)
+        return out[:, :S], st
+    nc = S // L
+    scale = 1.0 / math.sqrt(D)
+
+    qc = (q.astype(jnp.float32) * scale).reshape(B, nc, L, H, D)
+    kc = k.astype(jnp.float32).reshape(B, nc, L, H, D)
+    vc = v.astype(jnp.float32).reshape(B, nc, L, H, D)
+    il = i_log.astype(jnp.float32).reshape(B, nc, L, H)
+    fl = f_log.astype(jnp.float32).reshape(B, nc, L, H)
+
+    cumf = jnp.cumsum(fl, axis=2)                     # (B,nc,L,H)
+    b = il - cumf                                     # source weight logs
+    F_L = cumf[:, :, -1, :]                           # (B,nc,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        q_, k_, v_, b_, cumf_, FL_ = inp               # per-chunk slices
+        # stabilizers
+        m_intra = cumf_ + jax.lax.cummax(b_, axis=1)   # (B,L,H)
+        m_inter = cumf_ + m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+        # intra scores
+        logw = cumf_[:, :, None, :] - 0.0 + b_[:, None, :, :] - m_t[:, :, None, :]
+        logw = jnp.where(causal[None, :, :, None], logw, -jnp.inf)
+        w = jnp.exp(logw)                              # (B,t,s,H)
+        qk = jnp.einsum("blhd,bmhd->blmh", q_, k_)
+        h_num = jnp.einsum("blmh,blmh,bmhd->blhd", qk, w, v_)
+        # inter contributions
+        w_in = jnp.exp(cumf_ + m[:, None, :] - m_t)    # (B,L,H)
+        h_num = h_num + jnp.einsum("blhd,bhde,blh->blhe", q_, C, w_in)
+        n_dot = jnp.einsum("blhd,bhd->blh", q_, n)
+        denom_intra = jnp.einsum("blmh,bmhd,blhd->blh", w, k_, q_)
+        denom = denom_intra + n_dot * w_in
+        h = h_num / jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))[..., None]
+        # state update
+        Mloc = jnp.max(b_, axis=1)                     # (B,H)
+        m_new = jnp.maximum(m + FL_, FL_ + Mloc)
+        wk_s = jnp.exp(FL_[:, None, :] + b_ - m_new[:, None, :])  # (B,L,H)
+        C_new = C * jnp.exp(m + FL_ - m_new)[:, :, None, None] + jnp.einsum(
+            "blhd,blhe,blh->bhde", k_, v_, wk_s
+        )
+        n_new = n * jnp.exp(m + FL_ - m_new)[:, :, None] + jnp.einsum(
+            "blhd,blh->bhd", k_, wk_s
+        )
+        return (C_new, n_new, m_new), h
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (qc, kc, vc, b, cumf, F_L)
+    )
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, D)
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_recurrent_ref(q, k, v, i_log, f_log, state=None):
+    """Naive per-step oracle for tests."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    if state is None:
+        C = jnp.zeros((B, H, D, D), jnp.float32)
+        n = jnp.zeros((B, H, D), jnp.float32)
+        m = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C, n, m = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_, k_, v_, il_, fl_ = inp
+        m_new = jnp.maximum(fl_ + m, il_)
+        f_ = jnp.exp(fl_ + m - m_new)
+        i_ = jnp.exp(il_ - m_new)
+        C = C * f_[:, :, None, None] + i_[:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k_, v_
+        )
+        n = n * f_[:, :, None] + i_[:, :, None] * k_
+        num = jnp.einsum("bhd,bhde->bhe", q_ * scale, C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", q_ * scale, n)), jnp.exp(-m_new)
+        )
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (q, k, v, i_log, f_log)
+    )
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C, n, m), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_apply(params, x, cfg, *, state=None, impl: str = "chunked"):
+    d_in, H, hd = mlstm_dims(cfg)
+    dt = x.dtype
+    x = apply_norm(params["ln"], x, cfg.norm, cfg.norm_eps)
+    xu = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt))
+    z = jnp.einsum("bsd,de->bse", x, params["w_gate"].astype(dt))
+    q = jnp.einsum("bse,ef->bsf", xu, params["wq"].astype(dt)).reshape(*x.shape[:2], H, hd)
+    k = jnp.einsum("bse,ef->bsf", xu, params["wk"].astype(dt)).reshape(*x.shape[:2], H, hd)
+    v = jnp.einsum("bse,ef->bsf", xu, params["wv"].astype(dt)).reshape(*x.shape[:2], H, hd)
+    i_log = jnp.einsum("bse,eh->bsh", xu, params["wi"].astype(dt)).astype(jnp.float32) \
+        + params["b_i"].astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xu, params["wf"].astype(dt)).astype(jnp.float32)
+        + params["b_f"].astype(jnp.float32)
+    )
+    if impl == "recurrent" or x.shape[1] == 1:
+        h, new_state = mlstm_recurrent_ref(q, k, v, i_log, f_log, state=state)
+    else:
+        h, new_state = _mlstm_chunked(q, k, v, i_log, f_log, cfg.xlstm_chunk, state=state)
+    h = h.reshape(*x.shape[:2], d_in)
+    h = apply_norm(params["out_norm"], h, cfg.norm, cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, params["w_down"].astype(dt)), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    H, hd = slstm_dims(cfg)
+    d_ff = int(cfg.slstm_proj_factor * d)
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = WSpec((d, d), ("embed", None), init="small")
+        # "slstm_rec" (default replicated) lets a perf variant shard the
+        # recurrent weights' output dim over the model axis
+        gates[f"r_{g}"] = WSpec((H, hd, hd), ("ssm_heads", None, "slstm_rec"),
+                                init="small")
+        gates[f"b_{g}"] = WSpec((d,), (None,), init="ones" if g == "f" else "zeros")
+    return {
+        **gates,
+        "ln": norm_specs(d, cfg.norm),
+        "ffn_up": WSpec((d, d_ff), ("embed", "mlp")),
+        "ffn_down": WSpec((d_ff, d), ("mlp", "embed")),
+        "ffn_norm": norm_specs(d),
+    }
+
+
+def slstm_apply(params, x, cfg, *, state=None):
+    """x: (B,S,d). state: (c,n,h,m) each (B,d)-shaped (heads folded)."""
+    B, S, d = x.shape
+    H, hd = slstm_dims(cfg)
+    dt = x.dtype
+    x = apply_norm(params["ln"], x, cfg.norm, cfg.norm_eps)
+    xf = x.astype(jnp.float32)
+
+    pre = {
+        g: jnp.einsum("bsd,de->bse", xf, params[f"w_{g}"].astype(jnp.float32))
+        + params[f"b_{g}"].astype(jnp.float32)
+        for g in ("i", "f", "z", "o")
+    }
+    R = {g: params[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        c0, n0, h0 = zeros, zeros + 1e-6, zeros
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = {
+            g: jnp.einsum("bhd,hde->bhe", hh, R[g]).reshape(B, d)
+            for g in ("i", "f", "z", "o")
+        }
+        gi = inp["i"] + rec["i"]
+        gf = inp["f"] + rec["f"]
+        gz = jnp.tanh(inp["z"] + rec["z"])
+        go = jax.nn.sigmoid(inp["o"] + rec["o"])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+        fp = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+        ip = jnp.exp(gi - m_new)
+        c = fp * c + ip * gz
+        n = fp * n + ip
+        h = go * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = {g: jnp.moveaxis(v, 1, 0) for g, v in pre.items()}
+    unroll = max(1, min(getattr(cfg, "slstm_unroll", 1), S))
+    (cf, nf, hf, mf), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs,
+                                        unroll=unroll)
+    y = jnp.moveaxis(hs, 0, 1).astype(dt)
+    # post-FFN (GeLU, pf 4/3)
+    yn = apply_norm(params["ffn_norm"], y, cfg.norm, cfg.norm_eps)
+    ff = jnp.einsum("bsd,df->bsf", yn, params["ffn_up"].astype(dt))
+    ff = jax.nn.gelu(ff)
+    y = y + jnp.einsum("bsf,fd->bsd", ff, params["ffn_down"].astype(dt))
+    return y, (cf, nf, hf, mf)

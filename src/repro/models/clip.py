@@ -1,0 +1,145 @@
+"""CLIP-style dual encoder (the paper's own testbed model family).
+
+Vision encoder (over stub patch embeddings) + text encoder + cosine-
+similarity head — exactly the three S2M3 functional modules of the
+paper's image-text-retrieval task (Fig. 1a).  Used by the sharing-
+equivalence tests and the distributed serving engine demo: the split
+model's outputs must be bit-identical to the monolithic one (paper Q3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers.embedding import embed_apply, embed_specs
+from repro.layers.initializers import WSpec, init_tree, stack_specs
+from repro.layers.mlp import mlp_apply, mlp_specs
+from repro.layers.norms import apply_norm, norm_specs
+from repro.layers.stack import scan_stack
+
+
+@dataclass(frozen=True)
+class ClipConfig:
+    name: str
+    vision_layers: int
+    vision_width: int
+    vision_heads: int
+    text_layers: int
+    text_width: int
+    text_heads: int
+    vocab_size: int
+    embed_dim: int           # shared contrastive space
+    n_image_tokens: int = 16
+    norm_eps: float = 1e-5
+
+
+@dataclass(frozen=True)
+class _TowerCfg:
+    """Adapter so we can reuse repro.layers.attention."""
+    rope_theta: float = 10000.0
+    use_rope: bool = False
+    sliding_window: int = 0
+    attn_logit_softcap: float = 0.0
+
+
+def _tower_specs(width: int, heads: int, layers: int):
+    block = {
+        "ln1": norm_specs(width, "layernorm"),
+        "attn": attn_lib.attention_specs(width, heads, heads, width // heads),
+        "ln2": norm_specs(width, "layernorm"),
+        "mlp": mlp_specs(width, 4 * width),
+    }
+    return stack_specs(block, layers)
+
+
+def _tower_apply(params, h, *, causal: bool, eps: float):
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    tc = _TowerCfg()
+
+    def fn(lp, c, x_l):
+        x = apply_norm(lp["ln1"], c, "layernorm", eps)
+        y, _ = attn_lib.attention_apply(lp["attn"], x, positions=positions,
+                                        cfg=tc, causal=causal)
+        c = c + y
+        x = apply_norm(lp["ln2"], c, "layernorm", eps)
+        return c + mlp_apply(lp["mlp"], x, "gelu"), jnp.zeros((0,))
+
+    h, _ = scan_stack(fn, params, h, remat="none")
+    return h
+
+
+def clip_specs(cfg: ClipConfig):
+    return {
+        "vision": {
+            "patch_proj": WSpec((cfg.vision_width, cfg.vision_width),
+                                (None, "embed")),
+            "pos": WSpec((cfg.n_image_tokens, cfg.vision_width), (None, "embed"),
+                         init="small"),
+            "blocks": _tower_specs(cfg.vision_width, cfg.vision_heads,
+                                   cfg.vision_layers),
+            "ln_post": norm_specs(cfg.vision_width, "layernorm"),
+            "proj": WSpec((cfg.vision_width, cfg.embed_dim), ("embed", None)),
+        },
+        "text": {
+            "embed": embed_specs(cfg.vocab_size, cfg.text_width),
+            "pos": WSpec((512, cfg.text_width), (None, "embed"), init="small"),
+            "blocks": _tower_specs(cfg.text_width, cfg.text_heads,
+                                   cfg.text_layers),
+            "ln_final": norm_specs(cfg.text_width, "layernorm"),
+            "proj": WSpec((cfg.text_width, cfg.embed_dim), ("embed", None)),
+        },
+        "logit_scale": WSpec((), (), init="zeros"),
+    }
+
+
+def encode_image(params, patches, cfg: ClipConfig, dtype=jnp.float32):
+    """patches: (B, n_image_tokens, vision_width) stub embeddings."""
+    h = patches.astype(dtype)
+    h = jnp.einsum("bnd,de->bne", h, params["patch_proj"].astype(dtype))
+    h = h + params["pos"].astype(dtype)[None]
+    h = _tower_apply(params["blocks"], h, causal=False, eps=cfg.norm_eps)
+    h = apply_norm(params["ln_post"], h.mean(axis=1, keepdims=True),
+                   "layernorm", cfg.norm_eps)[:, 0]
+    z = jnp.einsum("bd,de->be", h, params["proj"].astype(dtype))
+    return z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+
+def encode_text(params, ids, cfg: ClipConfig, dtype=jnp.float32):
+    """ids: (B, S) int32; EOT = last token."""
+    h = embed_apply(params["embed"], ids, dtype=dtype)
+    S = ids.shape[1]
+    h = h + params["pos"].astype(dtype)[None, :S]
+    h = _tower_apply(params["blocks"], h, causal=True, eps=cfg.norm_eps)
+    h = apply_norm(params["ln_final"], h, "layernorm", cfg.norm_eps)
+    z = jnp.einsum("bd,de->be", h[:, -1], params["proj"].astype(dtype))
+    return z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+
+def retrieval_logits(img_z, txt_z, logit_scale):
+    """Cosine-similarity task head (the paper's retrieval head)."""
+    return jnp.exp(logit_scale) * img_z @ txt_z.T
+
+
+def clip_forward(params, patches, ids, cfg: ClipConfig, dtype=jnp.float32):
+    """Monolithic forward — the oracle the split execution must match."""
+    zi = encode_image(params["vision"], patches, cfg, dtype)
+    zt = encode_text(params["text"], ids, cfg, dtype)
+    return retrieval_logits(zi, zt, params["logit_scale"])
+
+
+def contrastive_loss(params, patches, ids, cfg: ClipConfig):
+    logits = clip_forward(params, patches, ids, cfg)
+    n = logits.shape[0]
+    labels = jnp.arange(n)
+    li = -jax.nn.log_softmax(logits, axis=1)[jnp.arange(n), labels].mean()
+    lt = -jax.nn.log_softmax(logits, axis=0)[labels, jnp.arange(n)].mean()
+    return 0.5 * (li + lt)
+
+
+def init_clip(key, cfg: ClipConfig, dtype=jnp.float32):
+    return init_tree(key, clip_specs(cfg), dtype)

@@ -1,0 +1,2 @@
+"""Serving runtime: KV-cache slots, samplers, continuous batching,
+and the S2M3 multi-task engine."""

@@ -1,0 +1,116 @@
+"""Continuous-batching LM server.
+
+Requests (prompt token lists) are admitted into free KV-cache slots via
+a batch-1 prefill + scatter; live slots decode together in one batched
+``decode_step``; finished sequences free their slots for waiting
+requests.  This is the task-head serving loop the S2M3 engine drives for
+decoder-head models — and the module-level batching the paper sketches
+in §VI-C, made concrete.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kvcache import SlotPool, insert_sequence
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: int = -1           # -1: never stop early
+    # filled by the server:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    extras: dict = dataclasses.field(default_factory=dict)  # modality stubs
+
+
+class LMServer:
+    def __init__(self, bundle, *, max_batch: int = 4, cache_len: int = 256,
+                 seed: int = 0, params=None):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.params = params if params is not None else bundle.init(
+            jax.random.PRNGKey(seed))
+        self.pool = SlotPool(max_batch)
+        self.cache = bundle.init_cache(max_batch, cache_len, dtype=jnp.float32)
+        self._slot_req: dict[int, GenRequest] = {}
+        self._queue: deque[GenRequest] = deque()
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self._prefill = jax.jit(bundle.prefill)
+        self._decode = jax.jit(bundle.decode_step, donate_argnums=(2,))
+        self._steps = 0
+
+    # -- client API -----------------------------------------------------
+    def submit(self, req: GenRequest):
+        self._queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[GenRequest]:
+        finished = []
+        while (self._queue or self.pool.n_live) and max_steps > 0:
+            max_steps -= 1
+            self._admit()
+            finished.extend(self._step())
+        return finished
+
+    # -- internals ------------------------------------------------------
+    def _admit(self):
+        while self._queue and self.pool._free:
+            req = self._queue.popleft()
+            slot = self.pool.alloc()
+            one = self.bundle.init_cache(1, self.cache_len, dtype=jnp.float32)
+            batch = {"tokens": jnp.asarray([req.prompt], jnp.int32), **{
+                k: jnp.asarray(v)[None] for k, v in req.extras.items()}}
+            logits, one = self._prefill(self.params, batch, one)
+            self.cache = insert_sequence(self.cache, one, slot)
+            n_prefix = (self.cfg.n_image_tokens
+                        if self.cfg.has_vision_stub else 0)
+            self.pool.lengths[slot] = len(req.prompt) + n_prefix
+            self._slot_req[slot] = req
+            tok = self._pick(logits[0], req)
+            req.output.append(int(tok))
+
+    def _step(self):
+        finished = []
+        if self.pool.n_live == 0:
+            return finished
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        lengths = np.zeros((self.max_batch,), np.int32)
+        for s, req in self._slot_req.items():
+            tokens[s, 0] = req.output[-1]
+            lengths[s] = self.pool.lengths[s]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(lengths))
+        self._steps += 1
+        for s in list(self._slot_req):
+            req = self._slot_req[s]
+            self.pool.lengths[s] += 1
+            if self.pool.lengths[s] >= self.cache_len - 1:
+                req.done = True
+            else:
+                tok = int(self._pick(logits[s], req))
+                req.output.append(tok)
+                if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
+                    req.done = True
+            if req.done:
+                finished.append(req)
+                del self._slot_req[s]
+                self.pool.release(s)
+        return finished
+
+    def _pick(self, logits, req: GenRequest):
+        if req.temperature <= 0:
+            return jnp.argmax(logits, -1)
+        self._rng, k = jax.random.split(self._rng)
+        return sample(logits[None], k, temperature=req.temperature)[0]

@@ -1,0 +1,51 @@
+"""KV-cache slot pool for continuous batching.
+
+The decode cache is a fixed (layers, max_batch, cache_len, ...) pytree;
+``SlotPool`` tracks which batch slots are live and scatters a freshly
+prefetched single-sequence cache into a slot (axis 1 = batch on every
+leaf, by construction of cache_specs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotPool:
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self._free = list(range(max_slots))[::-1]
+        self.lengths = [0] * max_slots
+        self.live = [False] * max_slots
+
+    def alloc(self) -> int | None:
+        if not self._free:
+            return None
+        s = self._free.pop()
+        self.live[s] = True
+        return s
+
+    def release(self, slot: int):
+        self.live[slot] = False
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    @property
+    def n_live(self) -> int:
+        return sum(self.live)
+
+
+def insert_sequence(big_cache, one_cache, slot: int):
+    """Scatter a batch-1 cache into slot `slot` of the pooled cache.
+
+    Leaves are (layers, batch, ...): axis 1 indexes the slot.
+    """
+    def one(big, single):
+        return big.at[:, slot].set(single[:, 0].astype(big.dtype))
+
+    return jax.tree.map(one, big_cache, one_cache)
+
+
+def blank_like(cache):
+    return jax.tree.map(jnp.zeros_like, cache)

@@ -1,0 +1,21 @@
+"""Token samplers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, rng=None):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

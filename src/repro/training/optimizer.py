@@ -1,0 +1,122 @@
+"""Sharded AdamW (no optax on this box).
+
+Optimizer state shards exactly like the parameters (ZeRO-3 by
+construction under pjit).  ``moment_dtype="bfloat16"`` is the
+DeepSeek-V3 trick that makes the 405B/671B optimizer fit 16 GB chips.
+Optional int8 gradient compression (stochastic rounding) demonstrates
+the collective-bytes reduction path; on a real multi-host backend the
+cast happens before the cross-host reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+from repro.common.pytree import global_norm
+from repro.layers.initializers import WSpec
+
+F32 = jnp.float32
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - tcfg.warmup_steps)
+        / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def state_specs(param_specs, tcfg: TrainConfig):
+    """WSpec tree for the full optimizer state (drives shardings)."""
+    mdt = jnp.dtype(tcfg.moment_dtype)
+
+    def moment(ws: WSpec) -> WSpec:
+        return dataclasses.replace(ws, init="zeros", dtype=mdt)
+
+    is_ws = lambda x: isinstance(x, WSpec)
+    return {
+        "step": WSpec((), (), init="zeros", dtype=jnp.int32),
+        "params": param_specs,
+        "m": jax.tree.map(moment, param_specs, is_leaf=is_ws),
+        "v": jax.tree.map(moment, param_specs, is_leaf=is_ws),
+    }
+
+
+def init_state(params, tcfg: TrainConfig):
+    mdt = jnp.dtype(tcfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def compress_grads_int8(grads, key):
+    """Stochastic-rounding int8 quantize->dequantize (per-leaf scale)."""
+
+    def one(i, g):
+        gf = g.astype(F32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        x = gf / scale
+        k = jax.random.fold_in(key, i)
+        noise = jax.random.uniform(k, x.shape, F32) - 0.5
+        q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+        return q.astype(F32) * scale
+
+    leaves, treedef = jax.tree.flatten(grads)
+    return jax.tree.unflatten(
+        treedef, [one(i, g) for i, g in enumerate(leaves)])
+
+
+def adamw_update(state, grads, tcfg: TrainConfig, *, rng=None):
+    step = state["step"] + 1
+    lr = lr_schedule(tcfg, step)
+
+    if tcfg.grad_compression == "int8":
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        grads = compress_grads_int8(grads, jax.random.fold_in(rng, step))
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if tcfg.grad_clip > 0 else 1.0
+
+    b1, b2, eps = tcfg.b1, tcfg.b2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+    mdt = jnp.dtype(tcfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * clip
+        m_new = b1 * m.astype(F32) + (1 - b1) * g
+        v_new = b2 * v.astype(F32) + (1 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if tcfg.weight_decay > 0 and p.ndim >= 2:     # no decay on norms/bias
+            delta = delta + tcfg.weight_decay * p.astype(F32)
+        p_new = p.astype(F32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(state["params"])
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_state = {
+        "step": step,
+        "params": jax.tree.unflatten(treedef, [o[0] for o in out]),
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+    }
+    return new_state, {"lr": lr, "grad_norm": gnorm}

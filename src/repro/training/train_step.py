@@ -1,0 +1,56 @@
+"""Train step builder: value_and_grad + microbatching + AdamW."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+from repro.training.optimizer import adamw_update
+
+F32 = jnp.float32
+
+
+def make_train_step(bundle, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state', metrics)."""
+
+    def loss_of(params, batch):
+        loss, metrics = bundle.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        if tcfg.microbatches > 1:
+            k = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(k, b // k, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = single(state["params"], mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(F32) / k, acc_g, grads)
+                return (acc_g, acc_l + loss / k), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, F32), state["params"])
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), F32)), micro)
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = single(state["params"], batch)
+
+        new_state, opt_metrics = adamw_update(state, grads, tcfg)
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

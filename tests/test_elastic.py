@@ -1,0 +1,68 @@
+"""Elasticity & straggler mitigation."""
+
+import pytest
+
+from repro.training.elastic import (
+    ElasticTopology, Redispatcher, StragglerTracker,
+)
+
+
+def test_topology_detects_change():
+    topo = ElasticTopology(hosts={"a", "b", "c"})
+    assert not topo.update({"a", "b", "c"})
+    assert topo.update({"a", "b"})          # node c died
+    assert topo.generation == 1
+    assert topo.update({"a", "b", "d"})     # node d joined
+    assert topo.data_shards() == ["a", "b", "d"]
+
+
+def test_straggler_filtered():
+    t = StragglerTracker(threshold=2.0)
+    for _ in range(5):
+        t.record("fast1", 1.0)
+        t.record("fast2", 1.1)
+        t.record("slow", 10.0)
+    assert t.is_straggler("slow")
+    assert t.healthy(["fast1", "fast2", "slow"]) == ["fast1", "fast2"]
+
+
+def test_redispatch_fails_over():
+    t = StragglerTracker()
+    r = Redispatcher(t)
+    calls = []
+
+    def run_on(dev):
+        calls.append(dev)
+        if dev == "bad":
+            raise RuntimeError("device lost")
+        return f"ok@{dev}"
+
+    t.record("bad", 0.1)    # looks fastest
+    t.record("good", 1.0)
+    out, dev = r.call("vit", ["bad", "good"], run_on)
+    assert out == "ok@good" and dev == "good"
+    assert calls == ["bad", "good"]
+
+
+def test_redispatch_all_fail():
+    r = Redispatcher(StragglerTracker())
+    with pytest.raises(RuntimeError):
+        r.call("m", ["x"], lambda d: (_ for _ in ()).throw(ValueError()))
+
+
+def test_elastic_replan_integration():
+    """Pool shrinks -> replan keeps service feasible with migrations."""
+    from repro.core.module import ModelSpec, ModuleSpec
+    from repro.core.placement import greedy_place, replan
+    from repro.core.cluster import ClusterSpec, DeviceSpec
+
+    enc = ModuleSpec("e", "encoder", "vision", 50, flops_per_query=1e9)
+    head = ModuleSpec("h", "head", "task", 10, flops_per_query=1e8)
+    m = ModelSpec("m", "t", (enc,), head)
+    c1 = ClusterSpec(devices=[DeviceSpec("a", 200, 2e9),
+                              DeviceSpec("b", 200, 1e9)])
+    pl1 = greedy_place([m], c1)
+    c2 = c1.without("a")
+    pl2, migrations = replan([m], c1, c2, pl1)
+    assert pl2.feasible
+    assert all(dev == "b" for _, dev in migrations)

@@ -1,0 +1,67 @@
+"""HLO cost analyzer: exact dot flops, while-loop trip multiplication."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.hlo_cost import HloCost, analyze
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    m, k, n = 32, 64, 16
+    a = jnp.zeros((m, k))
+    b = jnp.zeros((k, n))
+    rep = analyze(_compiled_text(lambda a, b: a @ b, a, b))
+    assert rep.flops == 2 * m * k * n
+
+
+def test_scan_multiplies_by_trip_count():
+    k = 8
+    w = jnp.zeros((k, 16, 16))
+    x = jnp.zeros((4, 16))
+
+    def f(w, x):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    rep = analyze(_compiled_text(f, w, x))
+    expect = k * 2 * 4 * 16 * 16
+    # allow small deviation from fusion rewrites, but the trip count must
+    # be applied (a scan-once count would be 8x smaller)
+    assert expect * 0.9 <= rep.flops <= expect * 1.2, rep.flops
+
+
+def test_nested_scan_trip_product():
+    w = jnp.zeros((3, 4, 8, 8))
+    x = jnp.zeros((2, 8))
+
+    def f(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    rep = analyze(_compiled_text(f, w, x))
+    expect = 3 * 4 * 2 * 2 * 8 * 8
+    assert expect * 0.9 <= rep.flops <= expect * 1.2, rep.flops
+
+
+def test_bytes_positive_and_scale_with_input():
+    small = analyze(_compiled_text(lambda x: (x * 2).sum(), jnp.zeros((128,))))
+    big = analyze(_compiled_text(lambda x: (x * 2).sum(), jnp.zeros((4096,))))
+    assert big.bytes > small.bytes > 0
+
+
+def test_no_collectives_on_single_device():
+    rep = analyze(_compiled_text(lambda x: x @ x, jnp.zeros((8, 8))))
+    assert rep.collective_bytes == 0

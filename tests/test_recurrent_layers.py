@@ -1,0 +1,103 @@
+"""Mamba2 SSD and xLSTM: chunked-parallel vs recurrent oracle equality,
+and state continuation (the prefill->decode contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import mamba2 as m2
+from repro.layers import xlstm as xl
+
+
+def _ssd_inputs(key, B=2, S=32, H=3, P=8, N=4):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    A_log = jnp.linspace(-1.0, 0.5, H)
+    D = jnp.ones((H,))
+    return x, Bm, Cm, dt, A_log, D
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32, 31])
+def test_ssd_chunked_matches_recurrent(chunk):
+    x, Bm, Cm, dt, A_log, D = _ssd_inputs(jax.random.PRNGKey(0))
+    y_c, s_c = m2._ssd_chunked(x, Bm, Cm, dt, A_log, D, chunk)
+    y_r, s_r = m2.ssd_recurrent_ref(x, Bm, Cm, dt, A_log, D)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_continuation():
+    """chunked(full) == chunked(first half) then continue on second half."""
+    x, Bm, Cm, dt, A_log, D = _ssd_inputs(jax.random.PRNGKey(1), S=32)
+    y_full, s_full = m2._ssd_chunked(x, Bm, Cm, dt, A_log, D, 8)
+    y1, s1 = m2._ssd_chunked(x[:, :16], Bm[:, :16], Cm[:, :16], dt[:, :16],
+                             A_log, D, 8)
+    y2, s2 = m2._ssd_chunked(x[:, 16:], Bm[:, 16:], Cm[:, 16:], dt[:, 16:],
+                             A_log, D, 8, initial_state=s1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 13])
+def test_mlstm_chunked_matches_recurrent(chunk):
+    key = jax.random.PRNGKey(2)
+    B, S, H, D = 2, 16, 2, 8
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    i_log = jax.random.normal(ks[3], (B, S, H))
+    f_log = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    h_c, st_c = xl._mlstm_chunked(q, k, v, i_log, f_log, chunk)
+    h_r, st_r = xl.mlstm_recurrent_ref(q, k, v, i_log, f_log)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               rtol=3e-4, atol=3e-4)
+    for a, b in zip(st_c[:2], st_r[:2]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_mlstm_state_continuation():
+    key = jax.random.PRNGKey(3)
+    B, S, H, D = 1, 16, 2, 4
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    il = jax.random.normal(ks[3], (B, S, H))
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    h_full, _ = xl._mlstm_chunked(q, k, v, il, fl, 4)
+    _, st = xl._mlstm_chunked(q[:, :8], k[:, :8], v[:, :8], il[:, :8],
+                              fl[:, :8], 4)
+    h2, _ = xl._mlstm_chunked(q[:, 8:], k[:, 8:], v[:, 8:], il[:, 8:],
+                              fl[:, 8:], 4, state=st)
+    np.testing.assert_allclose(np.asarray(h_full[:, 8:]), np.asarray(h2),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_slstm_decode_continuation():
+    """slstm_apply over S steps == step-by-step with carried state."""
+    from repro.common.config import ArchConfig
+    from repro.layers.initializers import init_tree
+
+    cfg = ArchConfig(name="x", family="ssm", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=0, vocab_size=16)
+    params = init_tree(jax.random.PRNGKey(0), xl.slstm_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    y_full, st_full = xl.slstm_apply(params, x, cfg)
+    st = None
+    outs = []
+    for t in range(6):
+        y, st = xl.slstm_apply(params, x[:, t : t + 1], cfg, state=st)
+        outs.append(y)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               rtol=2e-4, atol=2e-4)

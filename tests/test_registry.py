@@ -1,0 +1,68 @@
+"""Module sharing registry + paper Table X arithmetic."""
+
+import pytest
+
+from repro.core.module import ModelSpec, ModuleSpec, distinct_modules
+from repro.core.registry import ModuleRegistry
+from repro.core.zoo import paper_zoo
+
+
+def _m(name, n=10):
+    return ModuleSpec(name, "encoder", "vision", n)
+
+
+def _model(name, *mods, head=None):
+    return ModelSpec(name, "t", tuple(mods), head or ModuleSpec(
+        f"{name}-head", "head", "task", 1))
+
+
+def test_add_returns_only_new_modules():
+    reg = ModuleRegistry()
+    shared = _m("vit")
+    new1 = reg.add_model(_model("m1", shared))
+    new2 = reg.add_model(_model("m2", shared))
+    assert {m.name for m in new1} == {"vit", "m1-head"}
+    assert {m.name for m in new2} == {"m2-head"}
+    assert reg.refcount("vit") == 2
+
+
+def test_remove_frees_only_unreferenced():
+    reg = ModuleRegistry()
+    shared = _m("vit")
+    reg.add_model(_model("m1", shared))
+    reg.add_model(_model("m2", shared))
+    freed = reg.remove_model("m1")
+    assert {m.name for m in freed} == {"m1-head"}
+    freed = reg.remove_model("m2")
+    assert {m.name for m in freed} == {"vit", "m2-head"}
+
+
+def test_signature_collision_rejected():
+    reg = ModuleRegistry()
+    reg.add_model(_model("m1", _m("vit", 10)))
+    with pytest.raises(ValueError):
+        reg.add_model(_model("m2", _m("vit", 99)))   # same name, diff spec
+    with pytest.raises(ValueError):
+        distinct_modules([_model("a", _m("x", 1)), _model("b", _m("x", 2))])
+
+
+def test_paper_table_x_sharing_savings():
+    """Table X: 4 tasks share ViT-B/16 + CLIP TRF -> 61.5% saving."""
+    zoo = paper_zoo()
+    reg = ModuleRegistry()
+    for name in ("clip-vit-b/16", "encoder-only-vqa-s", "alignment-vit-b",
+                 "clip-cls-vit-b/16"):
+        reg.add_model(zoo[name])
+    saving = reg.sharing_savings()
+    assert 0.58 <= saving <= 0.65, saving    # paper: 61.5%
+
+
+def test_paper_split_savings_table_vi():
+    """Table VI: per-model max-module saving, e.g. CLIP RN50 ~50%."""
+    zoo = paper_zoo()
+    rn50 = zoo["clip-resnet-50"]
+    saving = 1 - rn50.max_module_bytes / rn50.total_bytes
+    assert 0.45 <= saving <= 0.55            # paper: -50%
+    vitb16 = zoo["clip-vit-b/16"]
+    saving = 1 - vitb16.max_module_bytes / vitb16.total_bytes
+    assert 0.25 <= saving <= 0.35            # paper: -31%

@@ -1,0 +1,137 @@
+"""Routing: Eq. (1)-(3) semantics, parallel speedup, pipelining, batching."""
+
+import math
+
+import pytest
+
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.core.placement import Placement, greedy_place
+from repro.core.routing import (
+    Request, batch_factor, coalesce_batches, simulate, timeline_ascii,
+)
+
+
+def _two_encoder_setup(t_v=2.0, t_t=1.0, t_h=0.1):
+    vis = ModuleSpec("vis", "encoder", "vision", 10, input_bytes=0,
+                     output_bytes=0)
+    txt = ModuleSpec("txt", "encoder", "text", 10, input_bytes=0,
+                     output_bytes=0)
+    head = ModuleSpec("head", "head", "task", 0, input_bytes=0)
+    m = ModelSpec("m", "t", (vis, txt), head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec("a", 100, 1e9), DeviceSpec("b", 100, 1e9)],
+        default_bandwidth=1e12, default_latency=0.0,
+        comp_table={
+            ("vis", "a"): t_v, ("vis", "b"): t_v * 2,
+            ("txt", "a"): t_t, ("txt", "b"): t_t,
+            ("head", "a"): t_h, ("head", "b"): t_h,
+        })
+    return m, cluster
+
+
+def test_parallel_latency_is_max_not_sum():
+    m, cluster = _two_encoder_setup()
+    pl = Placement(assignment={"vis": ["a"], "txt": ["b"], "head": ["a"]})
+    res = simulate([Request(0, "m", "a")], pl, cluster, [m])
+    # Eq (1): max(2.0, 1.0) + 0.1, not 3.1
+    assert math.isclose(res.latencies[0], 2.1, rel_tol=1e-6)
+
+
+def test_colocated_encoders_serialize():
+    m, cluster = _two_encoder_setup()
+    pl = Placement(assignment={"vis": ["a"], "txt": ["a"], "head": ["a"]})
+    res = simulate([Request(0, "m", "a")], pl, cluster, [m])
+    assert math.isclose(res.latencies[0], 3.1, rel_tol=1e-6)
+
+
+def test_routing_picks_min_comp_device():
+    m, cluster = _two_encoder_setup()
+    pl = Placement(assignment={"vis": ["a", "b"], "txt": ["b"], "head": ["a"]})
+    res = simulate([Request(0, "m", "a")], pl, cluster, [m])
+    comp_events = [e for e in res.events if e.kind == "comp" and e.module == "vis"]
+    assert comp_events[0].device == "a"     # Eq. 7: t_comp 2.0 < 4.0
+
+
+def test_pipelining_overlaps_requests():
+    """Pipelining shrinks the MAKESPAN: request i+1's encoders start as
+    soon as the modules free up, instead of waiting for request i's head."""
+    vis = ModuleSpec("vis", "encoder", "vision", 10, input_bytes=0,
+                     output_bytes=0)
+    txt = ModuleSpec("txt", "encoder", "text", 10, input_bytes=0,
+                     output_bytes=0)
+    head = ModuleSpec("head", "head", "task", 0, input_bytes=0)
+    m = ModelSpec("m", "t", (vis, txt), head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec(n, 100, 1e9) for n in "abc"],
+        default_bandwidth=1e12, default_latency=0.0,
+        comp_table={("vis", "a"): 2.0, ("vis", "b"): 9.0, ("vis", "c"): 9.0,
+                    ("txt", "b"): 1.0, ("txt", "a"): 9.0, ("txt", "c"): 9.0,
+                    ("head", "c"): 1.0, ("head", "a"): 9.0, ("head", "b"): 9.0})
+    pl = Placement(assignment={"vis": ["a"], "txt": ["b"], "head": ["c"]})
+    reqs = [Request(i, "m", "a") for i in range(3)]
+
+    def makespan(res):
+        return max(e.end for e in res.events)
+
+    piped = simulate(reqs, pl, cluster, [m], pipeline=True)
+    serial = simulate(reqs, pl, cluster, [m], pipeline=False)
+    # serial: 3 x (2.0 + 1.0) = 9.0;  pipelined: 2+2+2+1 = 7.0
+    assert makespan(piped) < makespan(serial) - 1.0
+
+
+def test_comm_latency_charged():
+    vis = ModuleSpec("vis", "encoder", "vision", 10,
+                     input_bytes=10_000_000, output_bytes=0)
+    head = ModuleSpec("head", "head", "task", 0, input_bytes=0)
+    m = ModelSpec("m", "t", (vis,), head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec("src", 100, 1e9), DeviceSpec("dst", 100, 1e9)],
+        default_bandwidth=10e6, default_latency=0.01,
+        comp_table={("vis", "dst"): 1.0, ("vis", "src"): 50.0,
+                    ("head", "dst"): 0.0, ("head", "src"): 0.0})
+    pl = Placement(assignment={"vis": ["dst"], "head": ["dst"]})
+    res = simulate([Request(0, "m", "src")], pl, cluster, [m])
+    # 0.01 + 10MB/10MBps = 1.01 comm + 1.0 comp
+    assert math.isclose(res.latencies[0], 2.01, rel_tol=1e-3)
+
+
+def test_queue_aware_policy_beats_paper_under_congestion():
+    """Beyond-paper routing: with replicas, queue-aware spreads load."""
+    vis = ModuleSpec("vis", "encoder", "vision", 10, input_bytes=0,
+                     output_bytes=0)
+    head = ModuleSpec("head", "head", "task", 0, input_bytes=0)
+    m = ModelSpec("m", "t", (vis,), head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec("fast", 100, 1e9), DeviceSpec("slow", 100, 1e9)],
+        default_bandwidth=1e12, default_latency=0.0,
+        comp_table={("vis", "fast"): 1.0, ("vis", "slow"): 1.2,
+                    ("head", "fast"): 0.0, ("head", "slow"): 0.0})
+    pl = Placement(assignment={"vis": ["fast", "slow"], "head": ["fast"]})
+    reqs = [Request(i, "m", "fast") for i in range(4)]
+    t_paper = simulate(reqs, pl, cluster, [m], policy="paper").total_latency
+    t_qa = simulate(reqs, pl, cluster, [m], policy="queue_aware").total_latency
+    assert t_qa < t_paper
+
+
+def test_batching_factor_matches_paper_fit():
+    # footnote 4: batch 1/10/20 -> 1.28/4.90/9.16 s  => ratios 1/3.83/7.16
+    assert math.isclose(batch_factor(1), 1.0)
+    assert math.isclose(batch_factor(10), 3.84, rel_tol=0.02)
+    assert math.isclose(batch_factor(20), 7.0, rel_tol=0.05)
+
+
+def test_coalesce_batches_merges_within_window():
+    reqs = [Request(i, "m", "a", arrival=0.01 * i) for i in range(5)]
+    merged = coalesce_batches(reqs, window=1.0)
+    assert len(merged) == 1 and merged[0].batch == 5
+    separate = coalesce_batches(reqs, window=0.0)
+    assert len(separate) == 5
+
+
+def test_timeline_renders():
+    m, cluster = _two_encoder_setup()
+    pl = greedy_place([m], cluster)
+    res = simulate([Request(0, "m", "a")], pl, cluster, [m])
+    art = timeline_ascii(res)
+    assert "vis" in art and "#" in art

@@ -1,0 +1,126 @@
+"""Serving: continuous batching == sequential generation; slot reuse;
+S2M3 engine split/share semantics with real computation."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import get_config
+from repro.configs.s2m3_zoo import get_clip_config
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.models import clip as C
+from repro.models.api import build_model
+from repro.serving.engine import S2M3Engine
+from repro.serving.generator import GenRequest, LMServer
+
+
+def _reference_generate(bundle, params, prompt, n_new, cache_len=64):
+    """Sequential greedy decoding oracle."""
+    cache = bundle.init_cache(1, cache_len, dtype=jnp.float32)
+    logits, cache = jax.jit(bundle.prefill)(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cache)
+    out = [int(jnp.argmax(logits[0]))]
+    length = len(prompt)
+    for _ in range(n_new - 1):
+        logits, cache = jax.jit(bundle.decode_step)(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache,
+            jnp.asarray([length], jnp.int32))
+        length += 1
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_continuous_batching_matches_sequential():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    bundle = build_model(cfg, compute_dtype=jnp.float32)
+    params = bundle.init(jax.random.PRNGKey(0))
+    server = LMServer(bundle, max_batch=3, cache_len=64, params=params)
+
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12]]
+    for i, p in enumerate(prompts):
+        server.submit(GenRequest(rid=i, prompt=p, max_new_tokens=6))
+    finished = server.run()
+    assert len(finished) == len(prompts)
+
+    for req in finished:
+        expect = _reference_generate(bundle, params, req.prompt, 6)
+        assert req.output == expect, (req.rid, req.output, expect)
+
+
+def test_slot_reuse_under_pressure():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    bundle = build_model(cfg, compute_dtype=jnp.float32)
+    server = LMServer(bundle, max_batch=2, cache_len=32)
+    for i in range(5):     # more requests than slots
+        server.submit(GenRequest(rid=i, prompt=[i + 1], max_new_tokens=4))
+    finished = server.run()
+    assert len(finished) == 5
+    assert server.pool.n_live == 0
+
+
+def test_engine_split_equals_monolithic():
+    ccfg = get_clip_config("mini-clip")
+    params = C.init_clip(jax.random.PRNGKey(0), ccfg)
+    vis = ModuleSpec("mini-vit", "encoder", "vision", 1000)
+    txt = ModuleSpec("mini-trf", "encoder", "text", 1000)
+    head = ModuleSpec("cosine", "head", "task", 0)
+    model = ModelSpec("retrieval", "retrieval", (vis, txt), head)
+    engine = S2M3Engine()
+    engine.deploy_model(model, {
+        "mini-vit": lambda: (partial(C.encode_image, cfg=ccfg), params["vision"]),
+        "mini-trf": lambda: (partial(C.encode_text, cfg=ccfg), params["text"]),
+        "cosine": lambda: (
+            lambda p, enc: C.retrieval_logits(enc["vision"], enc["text"], p),
+            params["logit_scale"]),
+    })
+    patches = jax.random.normal(jax.random.PRNGKey(1),
+                                (4, ccfg.n_image_tokens, ccfg.vision_width))
+    ids = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 0,
+                             ccfg.vocab_size)
+    res = engine.infer("retrieval", {"vision": patches, "text": ids})
+    mono = C.clip_forward(params, patches, ids, ccfg)
+    np.testing.assert_array_equal(np.asarray(res.output), np.asarray(mono))
+
+
+def test_engine_shares_modules_across_tasks():
+    ccfg = get_clip_config("mini-clip")
+    params = C.init_clip(jax.random.PRNGKey(0), ccfg)
+    vis = ModuleSpec("mini-vit", "encoder", "vision", 1000)
+    txt = ModuleSpec("mini-trf", "encoder", "text", 1000)
+    builders = {
+        "mini-vit": lambda: (partial(C.encode_image, cfg=ccfg), params["vision"]),
+        "mini-trf": lambda: (partial(C.encode_text, cfg=ccfg), params["text"]),
+        "cosine": lambda: (
+            lambda p, enc: C.retrieval_logits(enc["vision"], enc["text"], p),
+            params["logit_scale"]),
+        "cls": lambda: (lambda p, enc: enc["vision"] @ p,
+                        jnp.ones((ccfg.embed_dim, 7))),
+    }
+    engine = S2M3Engine()
+    m1 = ModelSpec("retrieval", "retrieval", (vis, txt),
+                   ModuleSpec("cosine", "head", "task", 0))
+    m2 = ModelSpec("classify", "classification", (vis,),
+                   ModuleSpec("cls", "head", "task", 100))
+    loaded1 = engine.deploy_model(m1, builders)
+    loaded2 = engine.deploy_model(m2, builders)
+    assert "mini-vit" in loaded1 and "mini-vit" not in loaded2
+    # eviction keeps shared modules alive while referenced
+    freed = engine.evict_model("retrieval")
+    assert "mini-vit" not in freed        # still used by classify
+    freed = engine.evict_model("classify")
+    assert "mini-vit" in freed
+
+
+def test_vlm_server_with_image_stub():
+    cfg = get_config("internvl2-1b", smoke=True)
+    bundle = build_model(cfg, compute_dtype=jnp.float32)
+    server = LMServer(bundle, max_batch=2, cache_len=64)
+    img = 0.1 * np.random.default_rng(0).standard_normal(
+        (cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+    server.submit(GenRequest(rid=0, prompt=[1, 2, 3], max_new_tokens=4,
+                             extras={"image_embeds": img}))
+    finished = server.run()
+    assert len(finished) == 1 and len(finished[0].output) == 4

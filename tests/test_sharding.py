@@ -1,0 +1,88 @@
+"""Logical-axis sharding rules: resolution, demotion, hypothesis validity."""
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.sharding import (
+    DEFAULT_RULES, local_mesh, merge_rules, spec_for, tree_pspecs,
+)
+from repro.layers.initializers import WSpec
+
+
+def _mesh22():
+    devs = jax.devices()
+    if len(devs) >= 4:
+        arr = np.asarray(devs[:4]).reshape(2, 2)
+    else:
+        arr = np.asarray([devs[0]] * 4).reshape(2, 2)  # abstract-only use
+    return Mesh(arr, ("data", "model"))
+
+
+# NOTE: spec resolution only reads mesh.shape, never devices, so a
+# repeated-device mesh is fine for these tests.
+MESH = _mesh22()
+RULES = merge_rules(None)
+
+
+def test_basic_resolution():
+    assert spec_for((8, 16), ("embed", "mlp"), RULES, MESH) == P("data", "model")
+
+
+def test_indivisible_dim_demoted():
+    # dim 7 not divisible by data axis (2) -> replicated
+    assert spec_for((7, 16), ("embed", "mlp"), RULES, MESH) == P(None, "model")
+
+
+def test_axis_never_used_twice():
+    spec = spec_for((8, 8), ("mlp", "heads"), RULES, MESH)  # both -> model
+    used = [s for s in spec if s is not None]
+    assert used.count("model") <= 1
+
+
+def test_missing_pod_axis_dropped():
+    # "batch" -> ("pod","data"); no pod axis in a 2D mesh
+    assert spec_for((8,), ("batch",), RULES, MESH) == P("data")
+
+
+def test_merge_rules_override():
+    rules = merge_rules({"embed": None})
+    assert spec_for((8, 16), ("embed", "mlp"), rules, MESH) == P(None, "model")
+    # base table untouched
+    assert DEFAULT_RULES["embed"] == ("pod", "data")
+
+
+def test_tree_pspecs_over_wspec_tree():
+    tree = {"w": WSpec((8, 16), ("embed", "mlp")),
+            "b": WSpec((16,), ("norm",))}
+    specs = tree_pspecs(tree, RULES, MESH)
+    assert specs["w"] == P("data", "model")
+    assert specs["b"] == P(None)
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    axes=st.lists(st.sampled_from(
+        [None, "embed", "mlp", "heads", "batch", "vocab", "experts"]),
+        min_size=1, max_size=4),
+)
+def test_spec_always_valid(dims, axes):
+    n = min(len(dims), len(axes))
+    dims, axes = dims[:n], axes[:n]
+    spec = spec_for(dims, axes, RULES, MESH)
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in names:
+            assert a in MESH.shape
+            assert a not in used
+            used.append(a)
+            prod *= MESH.shape[a]
+        assert dim % prod == 0        # shardability invariant

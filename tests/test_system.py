@@ -1,0 +1,132 @@
+"""End-to-end behaviour: the paper's headline claims, reproduced.
+
+Each test pins one row of EXPERIMENTS.md to executable form:
+  Q1 split memory savings (Table VI/VII), Q2 latency vs cloud/local
+  (Table VII), Q3 accuracy preserved = split produces identical outputs,
+  Q4 multi-task sharing (Table X), greedy ~ optimal (the 89/95 claim),
+  device-availability scaling (Table IX).
+"""
+
+import jax
+import pytest
+
+from repro.core.module import distinct_modules
+from repro.core.placement import centralized_place, greedy_place, optimal_place
+from repro.core.profiles import install_profile, make_testbed
+from repro.core.registry import ModuleRegistry
+from repro.core.routing import simulate
+from repro.core.zoo import arch_model_spec, paper_zoo, request_for
+
+ZOO = paper_zoo()
+
+
+def _cluster(with_server=True):
+    cluster = make_testbed(with_server=with_server)
+    install_profile(cluster, distinct_modules(list(ZOO.values())).values())
+    return cluster
+
+
+def test_q1_split_reduces_single_device_memory():
+    clip = ZOO["clip-vit-b/16"]
+    assert clip.max_module_bytes < clip.total_bytes
+    saving = 1 - clip.max_module_bytes / clip.total_bytes
+    assert saving >= 0.30            # paper: 31% for ViT-B/16
+
+
+def test_q2_s2m3_within_15pct_of_cloud_and_10x_faster_than_jetson():
+    cluster = _cluster()
+    clip = ZOO["clip-vit-b/16"]
+    reqs = [request_for(clip, 0, "jetson-a")]
+    edge = cluster.without("server")
+    t_s2m3 = simulate(reqs, greedy_place([clip], edge), edge,
+                      [clip]).mean_latency
+    t_cloud = simulate(reqs, centralized_place([clip], cluster, "server"),
+                       cluster, [clip]).mean_latency
+    t_local = simulate(reqs, centralized_place([clip], cluster, "jetson-a"),
+                       cluster, [clip]).mean_latency
+    assert t_s2m3 <= 1.15 * t_cloud      # paper: 2.48 vs 2.44
+    assert t_s2m3 * 10 < t_local         # paper: 2.48 vs 45.19
+
+
+def test_q2_parallel_beats_no_parallel():
+    """Table VII: S2M3 2.48s vs 3.03s without parallel processing."""
+    cluster = _cluster(with_server=False)
+    clip = ZOO["clip-vit-b/16"]
+    pl = greedy_place([clip], cluster)
+    from repro.core.routing import work_multiplier
+
+    req = request_for(clip, 0, "jetson-a")
+    res = simulate([req], pl, cluster, [clip])
+    t_parallel = res.mean_latency
+    dev_of = {m: d[0] for m, d in pl.assignment.items()}
+    t_serial = sum(
+        cluster.comp_table[(m.name, dev_of[m.name])]
+        * work_multiplier(req, m.modality, cluster.device(dev_of[m.name]))
+        for m in clip.encoders)
+    assert t_parallel < t_serial + 0.5
+
+
+def test_q3_split_outputs_identical():
+    """Accuracy is untouched because the split model computes the same
+    function — asserted bit-exactly in test_serving.py; here we assert
+    the zoo decomposition matches the paper's Table II."""
+    clip = ZOO["clip-vit-b/16"]
+    assert {m.name for m in clip.modules} == \
+        {"vit-b/16", "clip-trf-38m", "cosine-similarity"}
+
+
+def test_q4_multi_task_sharing_targets_paper_number():
+    reg = ModuleRegistry()
+    for name in ("clip-vit-b/16", "encoder-only-vqa-s", "alignment-vit-b",
+                 "clip-cls-vit-b/16"):
+        reg.add_model(ZOO[name])
+    assert 0.55 <= reg.sharing_savings() <= 0.68   # paper: 61.5%
+
+
+def test_greedy_matches_bruteforce_on_testbed():
+    """The 89/95 claim, in miniature: greedy == optimal for the default
+    single-model testbed instance."""
+    cluster = _cluster(with_server=False)
+    clip = ZOO["clip-vit-b/16"]
+    reqs = [request_for(clip, 0, "jetson-a")]
+    pl_g = greedy_place([clip], cluster)
+    t_g = simulate(reqs, pl_g, cluster, [clip]).total_latency
+    _, t_o = optimal_place([clip], cluster, reqs)
+    assert t_g <= 1.05 * t_o
+
+
+def test_table_ix_server_accelerates_s2m3():
+    """S2M3 + server beats edge-only S2M3 (paper: 1.74 < 2.48)."""
+    cluster = _cluster(with_server=True)
+    clip = ZOO["clip-vit-b/16"]
+    reqs = [request_for(clip, 0, "jetson-a")]
+    edge = cluster.without("server")
+    t_edge = simulate(reqs, greedy_place([clip], edge), edge,
+                      [clip]).mean_latency
+    t_plus = simulate(reqs, greedy_place([clip], cluster), cluster,
+                      [clip]).mean_latency
+    assert t_plus < t_edge
+
+
+def test_assigned_archs_participate_in_sharing():
+    """tinyllama-1.1b (assigned arch) shares its LM with the paper's
+    Flint-v0.5-1B head — cross-registry sharing actually triggers."""
+    from repro.common.config import get_config
+
+    reg = ModuleRegistry()
+    reg.add_model(ZOO["flint-v0.5-1b"])
+    spec = arch_model_spec(get_config("tinyllama-1.1b", smoke=False))
+    new = reg.add_model(spec)
+    assert reg.refcount("tinyllama-1.1b") == 2
+    assert all(m.name != "tinyllama-1.1b" for m in new)
+
+
+def test_jetson_cannot_host_but_split_makes_it_feasible():
+    """Table VI '-' rows: models too big for one Jetson become feasible
+    under split placement across the pool."""
+    cluster = _cluster(with_server=False)
+    big = ZOO["imagebind"]
+    pl_local = centralized_place([big], cluster, "jetson-a")
+    assert not pl_local.feasible
+    pl_split = greedy_place([big], cluster)
+    assert pl_split.feasible

@@ -1,0 +1,76 @@
+"""S2M3 on TPU sub-meshes: pod partitioning + roofline t_comp, and the
+request-level work multiplicity semantics."""
+
+import pytest
+
+from repro.core.cluster import DeviceSpec
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.core.placement import greedy_place
+from repro.core.routing import Request, simulate, work_multiplier
+from repro.core.tpu import install_roofline_profile, pod_cluster, roofline_t_comp
+from repro.core.zoo import arch_model_spec, paper_zoo
+
+
+def test_pod_cluster_partitions():
+    cluster = pod_cluster([64, 64, 64, 64])
+    assert len(cluster.devices) == 4
+    assert all(d.kind == "submesh" for d in cluster.devices)
+    # 64 chips x 16 GiB each
+    assert cluster.devices[0].mem_capacity == 64 * 16 * 1024**3
+    # ICI inter-submesh links exist and are fast
+    t = cluster.t_comm(cluster.devices[0].name, cluster.devices[1].name, 1e9)
+    assert t < 0.01
+
+
+def test_roofline_t_comp_picks_binding_term():
+    small_hot = ModuleSpec("hot", "encoder", "vision", int(1e6),
+                           flops_per_query=1e15)   # compute-bound
+    big_cold = ModuleSpec("cold", "head", "task", int(20e9),
+                          flops_per_query=1e9)     # memory-bound
+    t_hot = roofline_t_comp(small_hot, n_chips=64)
+    t_cold = roofline_t_comp(big_cold, n_chips=64)
+    assert t_hot == pytest.approx(1e15 / (64 * 197e12))
+    assert t_cold == pytest.approx(40e9 / (64 * 819e9))
+
+
+def test_s2m3_places_paper_zoo_on_a_pod():
+    """The paper's whole 14-model zoo fits one 256-chip pod split 4 ways,
+    with every module placed and sharing deduped."""
+    zoo = paper_zoo()
+    models = list(zoo.values())
+    cluster = pod_cluster([64, 64, 64, 64])
+    install_roofline_profile(
+        cluster,
+        {m.name: m for mdl in models for m in mdl.modules}.values())
+    pl = greedy_place(models, cluster)
+    assert pl.feasible
+    res = simulate([Request(0, "llava-v1.5-13b", cluster.devices[0].name)],
+                   pl, cluster, models)
+    assert res.feasible and res.mean_latency < 1.0   # sub-second on a pod
+
+
+def test_assigned_archs_place_alongside_zoo():
+    from repro.common.config import get_config
+
+    zoo = paper_zoo()
+    extra = [arch_model_spec(get_config("internvl2-1b")),
+             arch_model_spec(get_config("whisper-tiny"))]
+    models = list(zoo.values()) + extra
+    cluster = pod_cluster([128, 64, 64])
+    install_roofline_profile(
+        cluster,
+        {m.name: m for mdl in models for m in mdl.modules}.values())
+    pl = greedy_place(models, cluster)
+    assert pl.feasible
+    res = simulate([Request(0, "internvl2-1b", cluster.devices[0].name)],
+                   pl, cluster, models)
+    assert res.feasible
+
+
+def test_work_multiplier_semantics():
+    req = Request(0, "m", "a", work=(("text", 100.0),))
+    batched = DeviceSpec("gpu", 1, 1e9, extra_work_factor=0.1)
+    serial = DeviceSpec("pi", 1, 1e9, extra_work_factor=1.0)
+    assert work_multiplier(req, "text", batched) == pytest.approx(10.9)
+    assert work_multiplier(req, "text", serial) == pytest.approx(100.0)
+    assert work_multiplier(req, "vision", serial) == 1.0
