@@ -1,20 +1,19 @@
 """Greedy-vs-optimal rate: the paper's 89/95 (93.7%) claim.
 
 95 instances = random samples over (model combo, requester, device
-availability, request count); each instance is solved by Algorithm 1 and
-by brute force, and we count exact matches (within float tolerance).
+availability, request count); each instance is planned through the
+``s2m3.Deployment`` facade with the ``greedy`` and ``optimal`` placement
+strategies, and we count exact matches (within float tolerance).
 """
 
 from __future__ import annotations
 
-import itertools
 import random
 
 from repro.core.module import distinct_modules
-from repro.core.placement import greedy_place, optimal_place
 from repro.core.profiles import install_profile, make_testbed
-from repro.core.routing import simulate
 from repro.core.zoo import paper_zoo, request_for
+from repro.s2m3 import Deployment
 
 SMALL_MODELS = [
     "clip-resnet-50", "clip-resnet-101", "clip-vit-b/32", "clip-vit-b/16",
@@ -39,11 +38,13 @@ def run(n_instances: int = 95, seed: int = 0):
         # the paper's protocol: 19 (benchmark x model) combos x 5 trials,
         # one inference request per trial
         reqs = [request_for(mdl, 0, requester)]
-        pl_g = greedy_place([mdl], cluster)
-        if not pl_g.feasible:
+        dep = Deployment(cluster).add_model(mdl)
+        dep.plan("greedy", routing="paper")
+        if not dep.placement.feasible:
             continue
-        t_g = simulate(reqs, pl_g, cluster, [mdl]).total_latency
-        _, t_o = optimal_place([mdl], cluster, reqs)
+        t_g = dep.simulate(reqs).total_latency
+        t_o = dep.plan("optimal", routing="paper",
+                       workload=reqs).simulate(reqs).total_latency
         total += 1
         ratios.append(t_g / t_o if t_o > 0 else 1.0)
         if t_g <= t_o * 1.001:

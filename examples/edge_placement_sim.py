@@ -1,15 +1,14 @@
-"""Reproduce the paper's testbed numbers with the placement/routing
-simulator and render the Fig. 3 timeline.
+"""Reproduce the paper's testbed numbers through the ``s2m3.Deployment``
+facade and render the Fig. 3 timeline.
 
     PYTHONPATH=src python examples/edge_placement_sim.py
 """
 
 from repro.core.module import distinct_modules
-from repro.core.placement import centralized_place, greedy_place, optimal_place
 from repro.core.profiles import install_profile, make_testbed
-from repro.core.registry import ModuleRegistry
-from repro.core.routing import simulate, timeline_ascii
+from repro.core.routing import timeline_ascii
 from repro.core.zoo import paper_zoo, request_for
+from repro.s2m3 import Deployment
 
 
 def main():
@@ -21,30 +20,35 @@ def main():
     reqs = [request_for(clip, 0, "jetson-a")]
 
     print("== CLIP ViT-B/16, image-text retrieval (paper Table VII) ==")
-    pl = greedy_place([clip], edge)
-    print(f"greedy placement: {pl.assignment}")
-    res = simulate(reqs, pl, edge, [clip])
+    dep = Deployment(edge).add_model(clip).plan("greedy", routing="paper")
+    print(f"greedy placement: {dep.placement.assignment}")
+    res = dep.simulate(reqs)
     print(f"S2M3 edge-only:     {res.mean_latency:6.2f} s  (paper 2.48)")
+    central = Deployment(cluster).add_model(clip)
     for dev, paper in [("server", 2.44), ("desktop", 3.46),
                        ("laptop", 3.02), ("jetson-a", 45.19)]:
-        plc = centralized_place([clip], cluster, dev)
-        t = simulate(reqs, plc, cluster, [clip]).mean_latency
+        t = central.plan("centralized", routing="paper",
+                         device=dev).simulate(reqs).mean_latency
         print(f"centralized {dev:10s}: {t:6.2f} s  (paper {paper})")
-    _, t_up = optimal_place([clip], edge, reqs)
+    t_up = dep.plan("optimal", routing="paper",
+                    workload=reqs).simulate(reqs).mean_latency
     print(f"Upper (brute force): {t_up:6.2f} s")
 
     print("\n== Fig. 3 timeline (S2M3, edge-only) ==")
-    print(timeline_ascii(res))
+    print(timeline_ascii(res.sim))
 
     print("\n== Table X: incremental multi-task deployment ==")
-    reg = ModuleRegistry()
+    multi = Deployment(edge)
     for name in ("clip-vit-b/16", "encoder-only-vqa-s", "alignment-vit-b",
                  "clip-cls-vit-b/16"):
-        new = reg.add_model(zoo[name])
-        print(f"+{name:22s} loads {[m.name for m in new] or 'NOTHING (all shared)'}"
-              f" -> total {reg.shared_bytes()/4/1e6:.0f}M params "
-              f"(dedicated would be {reg.dedicated_bytes()/4/1e6:.0f}M)")
-    print(f"sharing saving: {reg.sharing_savings():.1%}  (paper: 61.5%)")
+        before = set(multi.registry.modules)
+        multi.add_model(zoo[name])
+        new = [m for m in multi.registry.modules if m not in before]
+        print(f"+{name:22s} loads {new or 'NOTHING (all shared)'}"
+              f" -> total {multi.registry.shared_bytes()/4/1e6:.0f}M params "
+              f"(dedicated would be {multi.registry.dedicated_bytes()/4/1e6:.0f}M)")
+    report = multi.plan("greedy", routing="paper").report()
+    print(f"sharing saving: {report.sharing_savings:.1%}  (paper: 61.5%)")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """S2M3 end-to-end serving driver (the paper's scenario, real compute).
 
-Sets up 8 logical devices, plans a module placement with the greedy
-Algorithm 1, deploys THREE multi-modal tasks that share encoders
-(retrieval / classification / VQA with a tiny LM head), serves batched
-requests through the engine, and prints the Fig.-3-style timeline plus
-the sharing ledger.
+Everything goes through the ``s2m3.Deployment`` facade: admit THREE
+multi-modal tasks that share encoders (retrieval / classification / VQA
+with a tiny LM head), plan a greedy placement over 8 logical devices,
+materialize on real jax devices, then drive the SAME ``Request`` objects
+through the latency simulator and the live engine — predicted routes and
+real routes line up, and the sharing ledger shows the dedup savings.
 
     PYTHONPATH=src python examples/multi_task_serving.py
 """
@@ -20,10 +21,9 @@ import jax.numpy as jnp
 
 from repro.configs.s2m3_zoo import get_clip_config
 from repro.core.cluster import ClusterSpec, DeviceSpec
-from repro.core.module import ModelSpec, ModuleSpec, distinct_modules
-from repro.core.placement import greedy_place
+from repro.core.module import ModelSpec, ModuleSpec
 from repro.models import clip as C
-from repro.serving.engine import S2M3Engine
+from repro.s2m3 import Deployment, Request
 
 GB = 1024**3
 
@@ -35,7 +35,6 @@ def main():
     # ---- module & model specs (Table II in miniature) ----
     ccfg = get_clip_config("mini-clip")
     params = C.init_clip(jax.random.PRNGKey(0), ccfg)
-    lm_head_dim = ccfg.embed_dim
 
     vis = ModuleSpec("mini-vit", "encoder", "vision", 60_000,
                      flops_per_query=2e6)
@@ -49,22 +48,7 @@ def main():
     retrieval = ModelSpec("retrieval", "retrieval", (vis, txt), cos)
     classify = ModelSpec("classify", "classification", (vis,), cls)
     vqa = ModelSpec("vqa", "vqa-dec", (vis, txt), lm)
-    models = [retrieval, classify, vqa]
 
-    # ---- placement over the device pool (Algorithm 1) ----
-    pool = ClusterSpec(devices=[
-        DeviceSpec(f"dev{i}", 1 * GB, (2.0 if i < 2 else 1.0) * 1e9)
-        for i in range(min(4, len(devs)))
-    ])
-    placement = greedy_place(models, pool)
-    print("\ngreedy placement (module -> device):")
-    for mod, hosts in placement.assignment.items():
-        print(f"  {mod:16s} -> {hosts}")
-
-    # ---- deploy through the engine (sharing dedups) ----
-    device_map = {d.name: devs[i % len(devs)]
-                  for i, d in enumerate(pool.devices)}
-    engine = S2M3Engine(device_map)
     w_cls = jax.random.normal(jax.random.PRNGKey(5), (ccfg.embed_dim, 10))
     w_lm = jax.random.normal(jax.random.PRNGKey(6),
                              (2 * ccfg.embed_dim, 32)) * 0.3
@@ -82,28 +66,45 @@ def main():
         "mini-classifier": lambda: (lambda p, enc: enc["vision"] @ p, w_cls),
         "mini-lm": lambda: (lm_apply, w_lm),
     }
-    for mdl in models:
-        loaded = engine.deploy_model(mdl, builders, placement)
-        print(f"deploy {mdl.name:10s}: loaded {loaded or '(all reused!)'}")
 
-    print(f"\nHBM ledger: shared={engine.deployed_bytes():,} B vs "
-          f"dedicated={engine.dedicated_bytes():,} B "
-          f"(saving {1 - engine.deployed_bytes()/engine.dedicated_bytes():.1%})")
+    # ---- one facade call chain: admit -> plan -> materialize ----
+    pool = ClusterSpec(devices=[
+        DeviceSpec(f"dev{i}", 1 * GB, (2.0 if i < 2 else 1.0) * 1e9)
+        for i in range(min(4, len(devs)))
+    ])
+    dep = (Deployment(pool)
+           .add_model(retrieval, builders)
+           .add_model(classify)
+           .add_model(vqa)
+           .plan(placement="greedy", routing="paper")
+           .materialize())
 
-    # ---- serve requests across the three tasks ----
+    report = dep.report()
+    print("\n" + report.summary())
+    print(f"\nHBM ledger: shared={report.shared_bytes:,} B vs "
+          f"dedicated={report.dedicated_bytes:,} B "
+          f"(saving {report.sharing_savings:.1%})")
+
+    # ---- the same Request drives prediction AND real compute ----
     rng = jax.random.PRNGKey(1)
     patches = jax.random.normal(rng, (4, ccfg.n_image_tokens,
                                       ccfg.vision_width))
     ids = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 0,
                              ccfg.vocab_size)
-    for task, inputs in [
-        ("retrieval", {"vision": patches, "text": ids}),
-        ("classify", {"vision": patches}),
-        ("vqa", {"vision": patches, "text": ids}),
-    ]:
-        res = engine.infer(task, inputs)
-        print(f"\n{task}: latency {res.latency_s*1e3:.1f} ms, "
+    workload = [
+        Request(0, "retrieval", "dev0",
+                inputs={"vision": patches, "text": ids}),
+        Request(1, "classify", "dev0", inputs={"vision": patches}),
+        Request(2, "vqa", "dev0", inputs={"vision": patches, "text": ids}),
+    ]
+
+    predicted = dep.simulate(workload)
+    for req in workload:
+        res = dep.submit(req)
+        print(f"\n{req.model}: latency {res.latency_s*1e3:.1f} ms, "
               f"output shape {getattr(res.output, 'shape', None)}")
+        print(f"  sim route  {predicted.routes[req.rid]}")
+        print(f"  real route {res.devices}")
         t0 = min(t for _, _, t, _ in res.timeline)
         for mod, phase, a, b in res.timeline:
             bar = " " * int((a - t0) * 200) + "#" * max(1, int((b - a) * 200))
@@ -111,9 +112,17 @@ def main():
 
     # equivalence: split == monolithic (paper Q3)
     mono = C.clip_forward(params, patches, ids, ccfg)
-    split = engine.infer("retrieval", {"vision": patches, "text": ids}).output
+    split = dep.submit(workload[0]).output
     print(f"\nsplit-vs-monolithic max |diff|: "
           f"{float(jnp.max(jnp.abs(split - mono))):.2e}  (Q3: identical)")
+
+    # ---- lifecycle: hot-remove a task, then a device ----
+    freed = dep.evict("vqa")
+    print(f"\nevict vqa frees {freed} (shared encoders survive)")
+    rep = dep.replan(pool.without("dev0"))
+    print(f"replan without dev0: migrations {rep.migrations}")
+    print(f"retrieval still serves: "
+          f"{dep.submit(workload[0]).devices}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,25 @@
 """Quickstart: build an assigned architecture, train a few steps on the
 synthetic corpus, then generate with the continuous-batching server.
 
-    PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
+    python examples/quickstart.py [--arch tinyllama-1.1b]
+
+(pytest.ini sets pythonpath=src; outside pytest, prefix PYTHONPATH=src.)
+
+This file covers the single-model train/serve loop.  For the paper's
+actual contribution — multi-task, multi-device split-and-share serving —
+the stable entry point is the ``repro.s2m3.Deployment`` facade:
+
+    from repro.s2m3 import Deployment, Request
+    dep = (Deployment(cluster)
+           .add_model(spec, builders)
+           .plan(placement="greedy", routing="queue_aware")
+           .materialize())
+    dep.simulate(workload)   # predicted latency + memory ledger
+    dep.submit(workload[0])  # real compute, same Request object
+
+See examples/multi_task_serving.py (live engine) and
+examples/edge_placement_sim.py (testbed simulator) for full tours, and
+the "Public API" section of ROADMAP.md.
 """
 
 import argparse

@@ -29,6 +29,10 @@ class Placement:
     assignment: dict[str, list[str]] = field(default_factory=dict)
     feasible: bool = True
     infeasible_modules: list[str] = field(default_factory=list)
+    # per-module deployed bytes, keyed like ``assignment`` (filled by the
+    # placement strategies; lets reports compute per-device ledgers even
+    # for no-share placements whose keys are model-suffixed)
+    module_bytes: dict[str, int] = field(default_factory=dict)
 
     def devices_for(self, module_name: str) -> list[str]:
         return self.assignment.get(module_name, [])
@@ -106,7 +110,7 @@ def greedy_place(
 
     remaining = {d.name: d.mem_capacity for d in cluster.devices}
     placed: dict[str, list[ModuleSpec]] = {}
-    out = Placement()
+    out = Placement(module_bytes={k: m.mem_bytes for k, m in modules.items()})
 
     # line 3: descending memory requirement
     order = sorted(modules.values(), key=lambda m: -m.mem_bytes)
@@ -144,7 +148,9 @@ def centralized_place(models: list[ModelSpec], cluster: ClusterSpec,
     modules = distinct_modules(models)
     dev = cluster.device(device_name)
     total = sum(m.mem_bytes for m in modules.values())
-    out = Placement(assignment={m: [device_name] for m in modules})
+    out = Placement(
+        assignment={m: [device_name] for m in modules},
+        module_bytes={k: m.mem_bytes for k, m in modules.items()})
     if total > dev.mem_capacity:
         out.feasible = False
         out.infeasible_modules = list(modules)
@@ -164,7 +170,11 @@ def optimal_place(
     modules = list(distinct_modules(models).values())
     if len(modules) * len(cluster.devices) > max_nodes * 8:
         # guard: enumeration is |N|^{|M|}
-        pass
+        raise ValueError(
+            f"optimal_place would enumerate {len(cluster.devices)}^"
+            f"{len(modules)} assignments (modules x devices = "
+            f"{len(modules) * len(cluster.devices)} > {max_nodes * 8}); "
+            "raise max_nodes or use the greedy strategy")
     best, best_t = None, float("inf")
     names = [d.name for d in cluster.devices]
     caps = {d.name: d.mem_capacity for d in cluster.devices}
@@ -178,8 +188,9 @@ def optimal_place(
                 break
         if not ok:
             continue
-        pl = Placement(assignment={
-            m.name: [dev] for m, dev in zip(modules, combo)})
+        pl = Placement(
+            assignment={m.name: [dev] for m, dev in zip(modules, combo)},
+            module_bytes={m.name: m.mem_bytes for m in modules})
         result = simulate(workload, pl, cluster, models)
         if result.total_latency < best_t:
             best, best_t = pl, result.total_latency
@@ -193,15 +204,18 @@ def replan(
     old_cluster: ClusterSpec,
     new_cluster: ClusterSpec,
     old: Placement,
+    *,
+    place=None,
 ) -> tuple[Placement, list[tuple[str, str]]]:
     """Elastic reallocation (paper §VI-C "dynamic network conditions").
 
-    Re-runs the greedy on the new device pool and returns (placement,
-    migrations) where migrations lists (module, new_device) pairs that
-    require a load — modules already resident stay put when the greedy
-    re-chooses their device, so the migration set is the switching cost.
+    Re-runs the placement (``place(models, cluster)``, default greedy) on
+    the new device pool and returns (placement, migrations) where
+    migrations lists (module, new_device) pairs that require a load —
+    modules already resident stay put when the strategy re-chooses their
+    device, so the migration set is the switching cost.
     """
-    new = greedy_place(models, new_cluster)
+    new = (place or greedy_place)(models, new_cluster)
     migrations = []
     for mod, devs in new.assignment.items():
         for d in devs:

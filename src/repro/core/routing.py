@@ -22,7 +22,8 @@ Modeling choices that mirror the testbed:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
+from typing import Any
 
 from repro.core.cluster import ClusterSpec
 from repro.core.module import ModelSpec
@@ -37,6 +38,11 @@ def batch_factor(k: int) -> float:
 
 @dataclass(frozen=True)
 class Request:
+    """Unified request: drives both the latency simulator and the live
+    engine (s2m3.Deployment.simulate / .submit).  The sim reads the
+    scheduling fields; the engine additionally consumes ``inputs`` /
+    ``head_extra`` payloads, which are excluded from equality."""
+
     rid: int
     model: str
     source: str
@@ -45,6 +51,9 @@ class Request:
     # per-modality work multiplicity, e.g. {"text": 100} for a retrieval
     # request carrying 100 candidate prompts (see core.profiles)
     work: tuple[tuple[str, float], ...] = ()
+    # live-execution payloads: modality -> array, and head kwargs
+    inputs: Any = field(default=None, compare=False, repr=False)
+    head_extra: Any = field(default=None, compare=False, repr=False)
 
     def work_of(self, modality: str) -> float:
         for k, v in self.work:
@@ -97,20 +106,13 @@ def _pick_device(module, hosts, cluster, device_free, ready_time,
                  policy: str, source: str, req: "Request"):
     if not hosts:
         return None
-    if policy == "queue_aware":
-        def key(dname):
-            dev = cluster.device(dname)
-            arrive = ready_time + cluster.t_comm(source, dname,
-                                                 module.input_bytes)
-            return max(arrive, device_free.get(dname, 0.0)) \
-                + cluster.t_comp(module, dev) \
-                * work_multiplier(req, module.modality, dev)
-    else:  # "paper": Eq. (7) — min measured compute time for this request
-        def key(dname):
-            dev = cluster.device(dname)
-            return cluster.t_comp(module, dev) \
-                * work_multiplier(req, module.modality, dev)
-    return min(hosts, key=key)
+    # routing policies are named, registered callables (s2m3.policies);
+    # imported lazily so core stays importable on its own
+    from repro.s2m3.policies import RouteQuery, get_routing
+
+    return get_routing(policy)(RouteQuery(
+        module=module, hosts=tuple(hosts), cluster=cluster, source=source,
+        request=req, ready_time=ready_time, device_free=device_free))
 
 
 def simulate(
@@ -205,6 +207,16 @@ def simulate(
     return res
 
 
+def _merge_work(a: tuple[tuple[str, float], ...],
+                b: tuple[tuple[str, float], ...]) -> tuple[tuple[str, float], ...]:
+    """Merged request keeps the worst-case per-modality multiplicity: the
+    batched module call must still run every candidate prompt."""
+    acc = dict(a)
+    for k, v in b:
+        acc[k] = max(acc.get(k, 1.0), v)
+    return tuple(sorted(acc.items()))
+
+
 def coalesce_batches(requests: list[Request], window: float = 0.0
                      ) -> list[Request]:
     """Module-level batching (§VI-C): merge same-model requests whose
@@ -214,8 +226,8 @@ def coalesce_batches(requests: list[Request], window: float = 0.0
     for q in sorted(requests, key=lambda r: r.arrival):
         cur = pend.get(q.model)
         if cur is not None and q.arrival - cur.arrival <= window:
-            pend[q.model] = Request(cur.rid, cur.model, cur.source,
-                                    cur.arrival, cur.batch + q.batch)
+            pend[q.model] = replace(cur, batch=cur.batch + q.batch,
+                                    work=_merge_work(cur.work, q.work))
         else:
             if cur is not None:
                 out.append(cur)

@@ -2,12 +2,35 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --requests 8 --max-new 16
+
+``--plan`` skips serving and instead prints the S2M3 deployment plan for
+the arch over the paper's edge testbed (placement, memory ledger,
+predicted latency) via the ``s2m3.Deployment`` facade.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def plan_s2m3(cfg, routing: str) -> None:
+    """Where would this arch live on the paper's testbed, and how fast
+    would a request be?  One facade chain answers both."""
+    from repro.core.module import distinct_modules
+    from repro.core.profiles import install_profile, make_testbed
+    from repro.core.zoo import arch_model_spec, request_for
+    from repro.s2m3 import Deployment
+
+    spec = arch_model_spec(cfg)
+    cluster = make_testbed(with_server=True)
+    install_profile(cluster, distinct_modules([spec]).values())
+    dep = (Deployment(cluster)
+           .add_model(spec)
+           .plan(placement="greedy", routing=routing, replicate=True))
+    report = dep.simulate([request_for(spec, 0, "desktop")])
+    print(f"[serve] S2M3 plan for {cfg.name}:")
+    print(report.summary())
 
 
 def main():
@@ -19,6 +42,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan", action="store_true",
+                    help="print the S2M3 placement plan and exit")
+    ap.add_argument("--routing", default="queue_aware",
+                    help="routing policy for --plan (paper | queue_aware)")
     args = ap.parse_args()
 
     import jax
@@ -30,6 +57,9 @@ def main():
     from repro.serving.generator import GenRequest, LMServer
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.plan:
+        plan_s2m3(cfg, args.routing)
+        return
     bundle = build_model(cfg, compute_dtype=jnp.float32)
     print(f"[serve] {cfg.name} params={bundle.param_count():,}")
     server = LMServer(bundle, max_batch=args.max_batch,

@@ -32,10 +32,12 @@ from repro.layers.mlp import activation, mlp_apply, mlp_specs
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
+    # jax >= 0.5 exposes jax.shard_map (check_vma kwarg); older releases
+    # raise AttributeError on the lookup and ship it under experimental
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                              check_vma=False)
-    except TypeError:
+    except (AttributeError, TypeError):
         from jax.experimental.shard_map import shard_map
 
         return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,

@@ -36,6 +36,7 @@ class ModuleRuntime:
     apply: Callable              # (params, *inputs) -> output (jitted)
     params: Any
     device: Any                  # jax.Device or Sharding
+    host: str | None = None      # placement device name (routing identity)
 
 
 @dataclasses.dataclass
@@ -45,16 +46,26 @@ class InferenceResult:
     encoder_outputs: dict[str, Any]
     timeline: list[tuple[str, str, float, float]]   # (module, phase, t0, t1)
     latency_s: float
+    # placement device name each module ran on — comparable with the
+    # simulator's per-request routes (s2m3.PlanReport.routes)
+    devices: dict[str, str] = dataclasses.field(default_factory=dict)
+    rid: int | None = None
 
 
 class S2M3Engine:
-    def __init__(self, device_map: dict[str, Any] | None = None):
+    def __init__(self, device_map: dict[str, Any] | None = None, *,
+                 registry: ModuleRegistry | None = None,
+                 cluster=None, routing: str = "paper"):
         """device_map: placement device name -> jax.Device.  Defaults to a
-        single-device map over jax.devices()[0]."""
-        self.registry = ModuleRegistry()
+        single-device map over jax.devices()[0].  When ``cluster`` is
+        given, replica choice among a module's placement hosts goes
+        through the named routing policy instead of first-host."""
+        self.registry = registry or ModuleRegistry()
         self.runtimes: dict[str, ModuleRuntime] = {}
         self.device_map = device_map or {"dev0": jax.devices()[0]}
         self.placement: Placement | None = None
+        self.cluster = cluster
+        self.routing = routing
 
     # -- deployment -----------------------------------------------------
     def deploy_model(
@@ -68,16 +79,19 @@ class S2M3Engine:
         builders: module signature -> () -> (apply_fn, params).
         Returns names of modules actually loaded (sharing = short list).
         """
-        new_modules = self.registry.add_model(model)
+        self.registry.add_model(model)
         if placement is not None:
             self.placement = placement
         loaded = []
-        for m in new_modules:
+        for m in model.modules:
+            if m.name in self.runtimes:
+                continue                      # shared module already live
             apply_fn, params = builders[m.name]()
-            dev = self._device_for(m.name)
+            host = self._host_for(m.name)
+            dev = self._device_for(host)
             params = jax.device_put(params, dev)
             self.runtimes[m.name] = ModuleRuntime(
-                m, jax.jit(apply_fn), params, dev)
+                m, jax.jit(apply_fn), params, dev, host)
             loaded.append(m.name)
         return loaded
 
@@ -87,21 +101,51 @@ class S2M3Engine:
             self.runtimes.pop(m.name, None)
         return [m.name for m in freed]
 
-    def _device_for(self, module_name: str):
-        if self.placement is not None:
-            hosts = self.placement.devices_for(module_name)
-            if hosts:
-                return self.device_map[hosts[0]]
+    def migrate(self, module_name: str, host: str) -> None:
+        """Move a live module's weights to another placement device
+        (replan execution: the paper's dynamic-network migration)."""
+        rt = self.runtimes.get(module_name)
+        if rt is None or host not in self.device_map:
+            return
+        dev = self.device_map[host]
+        rt.params = jax.device_put(rt.params, dev)
+        rt.device, rt.host = dev, host
+
+    def _host_for(self, module_name: str) -> str | None:
+        """Placement device name for a module; replicated modules go
+        through the routing policy (empty-queue tie-break = the
+        simulator's choice for a fresh request)."""
+        if self.placement is None:
+            return None
+        hosts = self.placement.devices_for(module_name)
+        hosts = [h for h in hosts if h in self.device_map] or hosts
+        if not hosts:
+            return None
+        if len(hosts) > 1 and self.cluster is not None:
+            from repro.s2m3.policies import RouteQuery, get_routing
+
+            mod = self.registry.modules.get(module_name)
+            if mod is not None:
+                return get_routing(self.routing)(RouteQuery(
+                    module=mod, hosts=tuple(hosts), cluster=self.cluster))
+        return hosts[0]
+
+    def _device_for(self, host: str | None):
+        if host is not None and host in self.device_map:
+            return self.device_map[host]
         return next(iter(self.device_map.values()))
 
     # -- inference ------------------------------------------------------
     def infer(self, model_name: str, inputs: dict[str, Any],
-              head_extra: dict | None = None) -> InferenceResult:
+              head_extra: dict | None = None,
+              rid: int | None = None) -> InferenceResult:
         """inputs: modality -> array for each encoder; head receives the
         dict of encoder outputs (by modality) plus head_extra kwargs."""
         model = self.registry.models[model_name]
         t_start = time.perf_counter()
         timeline = []
+        devices = {m.name: rt.host for m in model.modules
+                   if (rt := self.runtimes.get(m.name)) and rt.host}
 
         # dispatch all encoders without blocking (async device execution);
         # device_put moves the modality payload to the hosting device
@@ -130,7 +174,8 @@ class S2M3Engine:
 
         return InferenceResult(
             model=model_name, output=result, encoder_outputs=enc_outputs,
-            timeline=timeline, latency_s=time.perf_counter() - t_start)
+            timeline=timeline, latency_s=time.perf_counter() - t_start,
+            devices=devices, rid=rid)
 
     # -- stats ----------------------------------------------------------
     def deployed_bytes(self) -> int:

@@ -1,0 +1,259 @@
+"""s2m3.Deployment facade: plan/materialize/submit lifecycle, policy
+registries, sim-vs-real route agreement, evict/redeploy refcounts,
+elastic replan with live weight migration."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.s2m3_zoo import get_clip_config
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.models import clip as C
+from repro.s2m3 import (
+    Deployment, Request, available_placements, available_routings,
+    get_placement, get_routing, register_placement,
+)
+
+GB = 1024**3
+
+
+@pytest.fixture(scope="module")
+def clip_setup():
+    ccfg = get_clip_config("mini-clip")
+    params = C.init_clip(jax.random.PRNGKey(0), ccfg)
+    vis = ModuleSpec("mini-vit", "encoder", "vision", 60_000,
+                     flops_per_query=2e6)
+    txt = ModuleSpec("mini-trf", "encoder", "text", 50_000,
+                     flops_per_query=1e6)
+    cos = ModuleSpec("cosine", "head", "task", 0)
+    cls = ModuleSpec("mini-cls", "head", "task", 1_000, flops_per_query=1e4)
+    retrieval = ModelSpec("retrieval", "retrieval", (vis, txt), cos)
+    classify = ModelSpec("classify", "classification", (vis,), cls)
+    builders = {
+        "mini-vit": lambda: (partial(C.encode_image, cfg=ccfg),
+                             params["vision"]),
+        "mini-trf": lambda: (partial(C.encode_text, cfg=ccfg),
+                             params["text"]),
+        "cosine": lambda: (
+            lambda p, enc: C.retrieval_logits(enc["vision"], enc["text"], p),
+            params["logit_scale"]),
+        "mini-cls": lambda: (lambda p, enc: enc["vision"] @ p,
+                             jnp.ones((ccfg.embed_dim, 7))),
+    }
+    patches = jax.random.normal(jax.random.PRNGKey(1),
+                                (2, ccfg.n_image_tokens, ccfg.vision_width))
+    ids = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                             ccfg.vocab_size)
+    return dict(ccfg=ccfg, params=params, retrieval=retrieval,
+                classify=classify, builders=builders,
+                inputs={"vision": patches, "text": ids})
+
+
+def _cluster(n=4):
+    return ClusterSpec(devices=[
+        DeviceSpec(f"dev{i}", 1 * GB, (2.0 if i < 2 else 1.0) * 1e9)
+        for i in range(n)
+    ])
+
+
+def _fresh(clip_setup, *, materialize=True):
+    dep = (Deployment(_cluster())
+           .add_model(clip_setup["retrieval"], clip_setup["builders"])
+           .add_model(clip_setup["classify"])
+           .plan("greedy", routing="paper"))
+    if materialize:
+        dep.materialize()
+    return dep
+
+
+# ---- registries ---------------------------------------------------------
+
+def test_builtin_policies_registered():
+    assert {"greedy", "no_share", "centralized", "optimal"} <= \
+        set(available_placements())
+    assert {"paper", "queue_aware"} <= set(available_routings())
+
+
+def test_unknown_policy_names_raise():
+    with pytest.raises(KeyError, match="unknown placement"):
+        get_placement("does-not-exist")
+    with pytest.raises(KeyError, match="unknown routing"):
+        get_routing("does-not-exist")
+    with pytest.raises(KeyError):
+        Deployment(_cluster()).plan("does-not-exist")
+    with pytest.raises(KeyError):
+        Deployment(_cluster()).plan("greedy", routing="does-not-exist")
+
+
+def test_custom_placement_registers():
+    @register_placement("everything-on-dev0")
+    def _pin(models, cluster, *, workload=None, **_):
+        from repro.core.placement import centralized_place
+
+        return centralized_place(models, cluster, cluster.devices[0].name)
+
+    m = ModelSpec("m", "t", (), ModuleSpec("h", "head", "task", 10))
+    dep = Deployment(_cluster()).add_model(m).plan("everything-on-dev0")
+    assert dep.placement.assignment["h"] == ["dev0"]
+
+
+# ---- planning + report --------------------------------------------------
+
+def test_plan_report_memory_ledger(clip_setup):
+    dep = _fresh(clip_setup, materialize=False)
+    report = dep.report()
+    assert report.feasible
+    total_used = sum(r["used"] for r in report.memory.values())
+    assert total_used == report.shared_bytes > 0
+    for dev, row in report.memory.items():
+        assert 0 <= row["used"] <= row["capacity"]
+    assert report.sharing_savings > 0       # mini-vit shared by both tasks
+
+
+def test_simulate_without_materialize(clip_setup):
+    dep = _fresh(clip_setup, materialize=False)
+    rep = dep.simulate([Request(0, "retrieval", "dev0"),
+                        Request(1, "classify", "dev0", arrival=0.1)])
+    assert rep.sim is not None and rep.feasible
+    assert rep.mean_latency > 0
+    assert set(rep.routes) == {0, 1}
+    # every routed module landed on a device from its placement
+    for rid, route in rep.routes.items():
+        for mod, dev in route.items():
+            assert dev in rep.assignments[mod]
+
+
+# ---- acceptance: one Request, predicted AND real ------------------------
+
+def test_same_request_drives_sim_and_real(clip_setup):
+    dep = _fresh(clip_setup)
+    req = Request(7, "retrieval", "dev0", inputs=clip_setup["inputs"])
+    predicted = dep.simulate([req])
+    result = dep.submit(req)
+    assert result.rid == 7
+    assert result.devices == predicted.routes[7]   # module -> device match
+    mono = C.clip_forward(clip_setup["params"],
+                          clip_setup["inputs"]["vision"],
+                          clip_setup["inputs"]["text"], clip_setup["ccfg"])
+    np.testing.assert_array_equal(np.asarray(result.output),
+                                  np.asarray(mono))
+
+
+def test_submit_without_inputs_raises(clip_setup):
+    dep = _fresh(clip_setup)
+    with pytest.raises(ValueError, match="no inputs"):
+        dep.submit(Request(0, "retrieval", "dev0"))
+
+
+def test_infer_requires_materialize(clip_setup):
+    dep = _fresh(clip_setup, materialize=False)
+    with pytest.raises(RuntimeError, match="not materialized"):
+        dep.infer("retrieval", clip_setup["inputs"])
+
+
+# ---- lifecycle: deploy -> evict -> redeploy -----------------------------
+
+def test_evict_keeps_shared_modules_alive(clip_setup):
+    dep = _fresh(clip_setup)
+    assert dep.registry.refcount("mini-vit") == 2
+    freed = dep.evict("retrieval")
+    # shared encoder survives while classify still references it
+    assert "mini-vit" not in freed
+    assert {"mini-trf", "cosine"} == set(freed)
+    assert dep.registry.refcount("mini-vit") == 1
+    assert "mini-vit" in dep.engine.runtimes
+    assert "cosine" not in dep.engine.runtimes
+    # classify still serves after the eviction
+    res = dep.infer("classify", {"vision": clip_setup["inputs"]["vision"]})
+    assert res.output.shape == (2, 7)
+    # last reference: runtime freed at refcount 0
+    freed = dep.evict("classify")
+    assert "mini-vit" in freed
+    assert dep.registry.refcount("mini-vit") == 0
+    assert not dep.engine.runtimes
+
+
+def test_redeploy_after_evict(clip_setup):
+    dep = _fresh(clip_setup)
+    dep.evict("retrieval")
+    dep.evict("classify")
+    # hot re-admission on the live deployment rebuilds the runtimes
+    dep.add_model(clip_setup["retrieval"], clip_setup["builders"])
+    req = Request(1, "retrieval", "dev0", inputs=clip_setup["inputs"])
+    mono = C.clip_forward(clip_setup["params"],
+                          clip_setup["inputs"]["vision"],
+                          clip_setup["inputs"]["text"], clip_setup["ccfg"])
+    np.testing.assert_array_equal(np.asarray(dep.submit(req).output),
+                                  np.asarray(mono))
+
+
+def test_hot_add_model_after_materialize(clip_setup):
+    dep = (Deployment(_cluster())
+           .add_model(clip_setup["retrieval"], clip_setup["builders"])
+           .plan("greedy", routing="paper")
+           .materialize())
+    dep.add_model(clip_setup["classify"])      # builders already known
+    assert "mini-cls" in dep.engine.runtimes
+    assert dep.registry.refcount("mini-vit") == 2
+    res = dep.infer("classify", {"vision": clip_setup["inputs"]["vision"]})
+    assert res.output.shape == (2, 7)
+
+
+def test_no_share_is_simulation_only(clip_setup):
+    dep = (Deployment(_cluster())
+           .add_model(clip_setup["retrieval"], clip_setup["builders"])
+           .plan("no_share", routing="paper"))
+    assert dep.simulate is not None          # planning/reporting still works
+    assert dep.report().shared_bytes > 0
+    with pytest.raises(NotImplementedError, match="simulation-only"):
+        dep.materialize()
+    live = _fresh(clip_setup)
+    with pytest.raises(NotImplementedError, match="no_share"):
+        live.plan("no_share")
+
+
+# ---- elasticity ---------------------------------------------------------
+
+def test_replan_migrates_live_weights(clip_setup):
+    dep = _fresh(clip_setup)
+    hosted_on = {name: rt.host for name, rt in dep.engine.runtimes.items()}
+    gone = sorted({h for h in hosted_on.values()})[0]
+    report = dep.replan(dep.cluster.without(gone))
+    assert report.feasible
+    for hosts in report.assignments.values():
+        assert gone not in hosts
+    for name, rt in dep.engine.runtimes.items():
+        assert rt.host != gone
+    # modules that left `gone` are listed as migrations
+    migrated = {m for m, _ in report.migrations}
+    assert {m for m, h in hosted_on.items() if h == gone} <= migrated
+    # still serves, bit-identically
+    req = Request(2, "retrieval", "dev1", inputs=clip_setup["inputs"])
+    mono = C.clip_forward(clip_setup["params"],
+                          clip_setup["inputs"]["vision"],
+                          clip_setup["inputs"]["text"], clip_setup["ccfg"])
+    np.testing.assert_array_equal(np.asarray(dep.submit(req).output),
+                                  np.asarray(mono))
+
+
+def test_replan_to_grown_cluster_extends_device_map(clip_setup):
+    """A device joining the pool must be usable by migrations — the
+    engine's device_map is extended, not silently skipped."""
+    dep = _fresh(clip_setup)
+    fast = DeviceSpec("dev-new", 1 * GB, 100e9)   # dominates every pick
+    report = dep.replan(dep.cluster.with_device(fast))
+    assert any(h == "dev-new" for hosts in report.assignments.values()
+               for h in hosts)
+    assert "dev-new" in dep.engine.device_map
+    moved_to_new = {m for m, h in report.migrations if h == "dev-new"}
+    assert moved_to_new
+    for name in moved_to_new:
+        if name in dep.engine.runtimes:
+            assert dep.engine.runtimes[name].host == "dev-new"
+    # sim and real still agree after the grow
+    req = Request(3, "retrieval", "dev0", inputs=clip_setup["inputs"])
+    assert dep.submit(req).devices == dep.simulate([req]).routes[3]

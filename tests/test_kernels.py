@@ -1,12 +1,16 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
 mode + hypothesis on decode lengths."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:                                  # property tests need hypothesis; the
+    import hypothesis.strategies as st   # rest of the file runs without it
+    from hypothesis import given, settings
+except ModuleNotFoundError:           # pragma: no cover - minimal install
+    st = None
 
 from repro.kernels import ops, ref
 
@@ -50,19 +54,25 @@ def test_flash_attention_variants(causal, window, softcap):
                                rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(l1=st.integers(1, 64), l2=st.integers(1, 64))
-def test_decode_attention_random_lengths(l1, l2):
-    ks = jax.random.split(jax.random.PRNGKey(2), 3)
-    B, H, K, D, T = 2, 4, 2, 16, 64
-    q = jax.random.normal(ks[0], (B, H, D))
-    k = jax.random.normal(ks[1], (B, T, K, D))
-    v = jax.random.normal(ks[2], (B, T, K, D))
-    lengths = jnp.array([l1, l2], jnp.int32)
-    out = ops.decode_attention(q, k, v, lengths, block_k=16, interpret=True)
-    expect = ref.decode_attention_ref(q, k, v, lengths)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
-                               rtol=2e-4, atol=2e-4)
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(l1=st.integers(1, 64), l2=st.integers(1, 64))
+    def test_decode_attention_random_lengths(l1, l2):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        B, H, K, D, T = 2, 4, 2, 16, 64
+        q = jax.random.normal(ks[0], (B, H, D))
+        k = jax.random.normal(ks[1], (B, T, K, D))
+        v = jax.random.normal(ks[2], (B, T, K, D))
+        lengths = jnp.array([l1, l2], jnp.int32)
+        out = ops.decode_attention(q, k, v, lengths, block_k=16,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_decode_attention_random_lengths():
+        pass
 
 
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [

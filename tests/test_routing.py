@@ -129,6 +129,24 @@ def test_coalesce_batches_merges_within_window():
     assert len(separate) == 5
 
 
+def test_coalesce_batches_preserves_work():
+    """Regression: merging used to rebuild the Request without ``work``,
+    silently dropping the retrieval text-encoder 100x multiplicity."""
+    reqs = [Request(i, "m", "a", arrival=0.01 * i,
+                    work=(("text", 100.0),)) for i in range(3)]
+    merged = coalesce_batches(reqs, window=1.0)
+    assert len(merged) == 1 and merged[0].batch == 3
+    assert merged[0].work_of("text") == 100.0
+    # worst-case per-modality multiplicity wins across merged requests
+    mixed = coalesce_batches(
+        [Request(0, "m", "a", work=(("text", 10.0),)),
+         Request(1, "m", "a", arrival=0.01,
+                 work=(("text", 100.0), ("vision", 2.0)))],
+        window=1.0)
+    assert mixed[0].work_of("text") == 100.0
+    assert mixed[0].work_of("vision") == 2.0
+
+
 def test_timeline_renders():
     m, cluster = _two_encoder_setup()
     pl = greedy_place([m], cluster)
