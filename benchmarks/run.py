@@ -1,14 +1,21 @@
-"""Benchmark driver: one section per paper table + roofline + microbench.
+"""Benchmark driver: one section per paper table + roofline + microbench
++ the continuous-batching scheduler.
 
 Prints ``name,us_per_call,derived`` CSV rows (per the harness contract):
 simulator latencies are reported in us; `derived` carries the row's full
-dict for human inspection.
+dict for human inspection.  Alongside the CSV, every section's rows are
+snapshotted to ``BENCH_<section>.json`` at the repo root so perf claims
+(kernel us/call, simulator latencies, scheduler end-to-end p50/p99) are
+diffable against history.
 """
 
 from __future__ import annotations
 
 import json
 import sys
+from pathlib import Path
+
+SNAPSHOT_DIR = Path(__file__).resolve().parents[1]
 
 
 def _emit(name: str, us, derived):
@@ -16,9 +23,17 @@ def _emit(name: str, us, derived):
     print(f"{name},{us},{d}")
 
 
+def _snapshot(section: str, rows, error: str | None = None) -> None:
+    path = SNAPSHOT_DIR / f"BENCH_{section}.json"
+    payload = {"section": section, "rows": rows}
+    if error is not None:
+        payload["error"] = error
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+
+
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import microbench, optimality, roofline, tables
+    from benchmarks import microbench, optimality, roofline, serving, tables
 
     sections = {
         "table_vi": tables.table_vi,
@@ -31,6 +46,7 @@ def main() -> None:
         "roofline": roofline.rows,
         "roofline_summary": roofline.summary,
         "microbench": microbench.run,
+        "serving": serving.run,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():
@@ -39,7 +55,9 @@ def main() -> None:
         try:
             rows = fn()
         except Exception as e:  # report, keep the harness going
-            _emit(name, "", {"error": f"{type(e).__name__}: {e}"})
+            err = f"{type(e).__name__}: {e}"
+            _emit(name, "", {"error": err})
+            _snapshot(name, [], error=err)
             continue
         for i, row in enumerate(rows):
             us = row.get("us_per_call")
@@ -50,6 +68,7 @@ def main() -> None:
                         us = round(float(row[key]) * 1e6, 1)
                         break
             _emit(f"{name}[{i}]", "" if us is None else us, row)
+        _snapshot(name, list(rows))
 
 
 if __name__ == "__main__":

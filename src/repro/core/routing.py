@@ -70,6 +70,28 @@ def work_multiplier(req: "Request", modality: str, device) -> float:
 
 
 @dataclass(frozen=True)
+class QueueSnapshot:
+    """Live queue state, shared language between the serving scheduler
+    and the routing policies.  ``device_free`` is the same device ->
+    predicted-busy-until mapping the event simulator threads through
+    ``RouteQuery.device_free`` — but observed from a *real* scheduler,
+    so ``queue_aware`` routing ranks replica hosts by actual load
+    instead of the engine's always-empty deploy-time queue.  ``depths``
+    adds per-module queued-stage counts for stats/backpressure
+    introspection."""
+
+    t: float                                  # observation time (s, scheduler epoch)
+    device_free: tuple[tuple[str, float], ...] = ()
+    depths: tuple[tuple[str, int], ...] = ()
+
+    def free_map(self) -> dict[str, float]:
+        return dict(self.device_free)
+
+    def depth_of(self, module: str) -> int:
+        return dict(self.depths).get(module, 0)
+
+
+@dataclass(frozen=True)
 class Event:
     rid: int
     module: str
@@ -99,7 +121,10 @@ class SimResult:
 
     @property
     def max_latency(self) -> float:
-        return max(self.latencies.values(), default=float("inf"))
+        if not self.feasible:
+            return float("inf")
+        # a feasible empty workload has no latency, not an infinite one
+        return max(self.latencies.values(), default=0.0)
 
 
 def _pick_device(module, hosts, cluster, device_free, ready_time,
@@ -186,11 +211,19 @@ def simulate(
             ]
         uplink_free[q.source] = up_free
 
-        # head-only models: the source ships the raw input to the head
+        # head-only models: the source ships the raw input to the head;
+        # the send contends on the same uplink the encoder sends use
         if not mdl.encoders:
             t_in = cluster.t_comm(q.source, head_dev,
                                   mdl.head.input_bytes * q.batch)
-            enc_out_arrival.append(start0 + t_in)
+            send_start = up_free
+            send_end = send_start + t_in
+            up_free = send_end if head_dev != q.source else send_start
+            uplink_free[q.source] = up_free
+            enc_out_arrival.append(send_end)
+            res.events.append(
+                Event(q.rid, mdl.head.name, head_dev, "comm_in",
+                      send_start, send_end))
 
         # --- task head (Eq. 3) ---
         ready = max(enc_out_arrival) if enc_out_arrival else start0
@@ -220,10 +253,21 @@ def _merge_work(a: tuple[tuple[str, float], ...],
 def coalesce_batches(requests: list[Request], window: float = 0.0
                      ) -> list[Request]:
     """Module-level batching (§VI-C): merge same-model requests whose
-    arrivals fall within `window` into one batched request."""
+    arrivals fall within `window` into one batched request.
+
+    Requests carrying live-execution payloads (``inputs`` /
+    ``head_extra``) are never merged: a merged Request keeps only one
+    payload, so coalescing them would silently drop the others' data
+    when the result is fed to ``submit()``.  Payload batching is the
+    serving scheduler's job (serving.scheduler), which stacks the
+    arrays instead of discarding them.
+    """
     out: list[Request] = []
     pend: dict[str, Request] = {}
     for q in sorted(requests, key=lambda r: r.arrival):
+        if q.inputs is not None or q.head_extra is not None:
+            out.append(q)                     # payload-carrying: never merge
+            continue
         cur = pend.get(q.model)
         if cur is not None and q.arrival - cur.arrival <= window:
             pend[q.model] = replace(cur, batch=cur.batch + q.batch,

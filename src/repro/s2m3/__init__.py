@@ -12,12 +12,15 @@ latency prediction, and live serving goes through ``Deployment``:
            .materialize())
     report = dep.simulate(workload)     # predicted PlanReport
     result = dep.submit(workload[0])    # real compute, same Request
+    results = dep.serve(workload)       # continuous-batching scheduler:
+                                        # cross-task batches at shared
+                                        # encoders, real queue-aware routing
 
 Extension points: ``@register_placement`` / ``@register_routing`` add
 named strategies without touching core.
 """
 
-from repro.core.routing import Request, SimResult  # noqa: F401
+from repro.core.routing import QueueSnapshot, Request, SimResult  # noqa: F401
 from repro.s2m3.deployment import Deployment, PlanReport  # noqa: F401
 from repro.s2m3.policies import (  # noqa: F401
     RouteQuery,
@@ -30,7 +33,8 @@ from repro.s2m3.policies import (  # noqa: F401
 )
 
 __all__ = [
-    "Deployment", "PlanReport", "Request", "SimResult", "RouteQuery",
+    "Deployment", "PlanReport", "Request", "SimResult", "QueueSnapshot",
+    "RouteQuery",
     "available_placements", "available_routings",
     "get_placement", "get_routing",
     "register_placement", "register_routing",

@@ -8,6 +8,7 @@ routed, servable multi-task inference.
 
     report = dep.simulate(workload)      # predicted PlanReport
     result = dep.submit(request)         # real compute (same Request!)
+    results = dep.serve(workload)        # continuous-batching scheduler
     dep.evict("retrieval")               # refcounted hot-remove
     dep.replan(cluster.without("dev3"))  # migrate live weights
 
@@ -97,6 +98,7 @@ class Deployment:
         self.registry = registry or ModuleRegistry()
         self.placement: Placement | None = None
         self.engine = None                     # serving.engine.S2M3Engine
+        self.scheduler = None                  # serving.scheduler.ServeScheduler
         self._builders: dict[str, Callable] = {}
         self._placement_name = "greedy"
         self._routing_name = "queue_aware"
@@ -275,6 +277,25 @@ class Deployment:
     def infer(self, model_name: str, inputs: dict[str, Any],
               head_extra: dict | None = None):
         return self._require_engine().infer(model_name, inputs, head_extra)
+
+    def serve(self, workload: list[Request], *,
+              max_batch: int = 8, max_queue_depth: int = 32,
+              admission: str = "block", config: Any = None):
+        """Drain ``workload`` through the continuous-batching scheduler:
+        per-module queues, admission control, and cross-task batch
+        coalescing at shared encoders (one encoder launch can serve
+        requests from several tasks).  Returns one ``InferenceResult``
+        per request, in workload order; ``self.scheduler`` keeps the
+        queue/batch-occupancy stats of the run (``stats_dict()``),
+        directly comparable with ``simulate(coalesce_window=...)``."""
+        from repro.serving.scheduler import SchedulerConfig, ServeScheduler
+
+        eng = self._require_engine()
+        cfg = config or SchedulerConfig(max_batch=max_batch,
+                                        max_queue_depth=max_queue_depth,
+                                        admission=admission)
+        self.scheduler = ServeScheduler(eng, config=cfg)
+        return self.scheduler.serve(workload)
 
     # -- elasticity -----------------------------------------------------
     def replan(self, new_cluster: ClusterSpec | None = None) -> PlanReport:

@@ -15,9 +15,13 @@ every layer:
   (beyond-paper: min predicted completion including queueing).
 
 The same routing policy object serves the event-driven simulator (full
-queue state in the ``RouteQuery``) and the live engine (empty queue at
-deploy time), which is what makes simulated and real module→device
-assignments comparable.
+queue state in the ``RouteQuery``) and the live engine, which is what
+makes simulated and real module→device assignments comparable.  The
+engine routes with an empty queue at deploy time; once a serving
+scheduler is attached (``serving.scheduler.ServeScheduler`` sets
+``engine.queue_probe``), ``RouteQuery.device_free`` carries the
+scheduler's *live* per-host occupancy — a ``core.routing.QueueSnapshot``
+— so ``queue_aware`` ranks replica hosts by real load.
 
 Register your own with the ``@register_placement`` /
 ``@register_routing`` decorators.
@@ -43,7 +47,8 @@ from repro.core.placement import (
 class RouteQuery:
     """Everything a routing policy may consult when choosing among the
     devices hosting a module replica.  ``request`` / queue state are
-    optional: the live engine routes with an empty queue."""
+    optional: the live engine routes with an empty queue at deploy time
+    and with the serving scheduler's live occupancy under load."""
 
     module: ModuleSpec
     hosts: tuple[str, ...]

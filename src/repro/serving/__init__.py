@@ -1,2 +1,4 @@
-"""Serving runtime: KV-cache slots, samplers, continuous batching,
-and the S2M3 multi-task engine."""
+"""Serving runtime: KV-cache slots, samplers, LM continuous batching
+(generator), the S2M3 multi-task engine, and the cross-task
+continuous-batching scheduler (scheduler.ServeScheduler) behind
+``s2m3.Deployment.serve()``."""

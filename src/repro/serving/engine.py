@@ -37,6 +37,10 @@ class ModuleRuntime:
     params: Any
     device: Any                  # jax.Device or Sharding
     host: str | None = None      # placement device name (routing identity)
+    # lazily materialized replica params, host -> device-resident copy.
+    # Populated only when routing actually sends traffic to another of
+    # the module's placement hosts (see S2M3Engine.params_on).
+    replicas: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -66,6 +70,10 @@ class S2M3Engine:
         self.placement: Placement | None = None
         self.cluster = cluster
         self.routing = routing
+        # optional live queue probe (set by serving.scheduler): () ->
+        # core.routing.QueueSnapshot.  When attached, routing decisions
+        # consult real per-device occupancy instead of an empty queue.
+        self.queue_probe: Callable[[], Any] | None = None
 
     # -- deployment -----------------------------------------------------
     def deploy_model(
@@ -108,32 +116,103 @@ class S2M3Engine:
         if rt is None or host not in self.device_map:
             return
         dev = self.device_map[host]
-        rt.params = jax.device_put(rt.params, dev)
+        cached = rt.replicas.pop(host, None)
+        rt.params = cached if cached is not None else \
+            jax.device_put(rt.params, dev)
         rt.device, rt.host = dev, host
 
-    def _host_for(self, module_name: str) -> str | None:
-        """Placement device name for a module; replicated modules go
-        through the routing policy (empty-queue tie-break = the
-        simulator's choice for a fresh request)."""
+    def module_hosts(self, module_name: str) -> list[str]:
+        """Placement hosts for a module that the engine can actually
+        execute on (i.e. present in ``device_map``).  Raises when the
+        placement names hosts but none is mapped — previously the engine
+        silently ran on an arbitrary device while reporting the unmapped
+        host, so real and reported routes diverged."""
         if self.placement is None:
-            return None
+            return []
         hosts = self.placement.devices_for(module_name)
-        hosts = [h for h in hosts if h in self.device_map] or hosts
+        mapped = [h for h in hosts if h in self.device_map]
+        if hosts and not mapped:
+            raise KeyError(
+                f"module {module_name!r} is placed on {list(hosts)} but none "
+                f"of those hosts is in device_map {sorted(self.device_map)}; "
+                "extend device_map (see Deployment._extend_device_map) or "
+                "replan onto mapped devices")
+        return mapped
+
+    def route_module(self, module_name: str, *, device_free=None,
+                     ready_time: float = 0.0, source: str | None = None,
+                     request=None) -> str | None:
+        """Choose the executing host for one module call.  Replicated
+        modules go through the named routing policy; callers holding
+        live queue state (the serving scheduler) pass it in, otherwise
+        the engine's attached ``queue_probe`` — if any — supplies it, so
+        ``queue_aware`` ranks hosts by real occupancy rather than the
+        empty deploy-time queue."""
+        hosts = self.module_hosts(module_name)
         if not hosts:
             return None
         if len(hosts) > 1 and self.cluster is not None:
             from repro.s2m3.policies import RouteQuery, get_routing
 
+            if device_free is None and self.queue_probe is not None:
+                snap = self.queue_probe()
+                device_free = snap.free_map()
+                ready_time = max(ready_time, snap.t)
             mod = self.registry.modules.get(module_name)
             if mod is not None:
                 return get_routing(self.routing)(RouteQuery(
-                    module=mod, hosts=tuple(hosts), cluster=self.cluster))
+                    module=mod, hosts=tuple(hosts), cluster=self.cluster,
+                    source=source, request=request, ready_time=ready_time,
+                    device_free=device_free or {}))
         return hosts[0]
+
+    def _host_for(self, module_name: str) -> str | None:
+        """Deploy-time host choice (empty-queue tie-break = the
+        simulator's choice for a fresh request, unless a live scheduler
+        probe is attached)."""
+        return self.route_module(module_name)
 
     def _device_for(self, host: str | None):
         if host is not None and host in self.device_map:
             return self.device_map[host]
         return next(iter(self.device_map.values()))
+
+    def params_on(self, module_name: str, host: str | None):
+        """Device-resident params for a module call routed to ``host``.
+        The primary copy lives on ``rt.host``; other placement hosts get
+        a lazily cached replica (weights still exist once per signature
+        per device)."""
+        rt = self.runtimes[module_name]
+        if host is None or host == rt.host or host not in self.device_map:
+            return rt.params
+        if host not in rt.replicas:
+            rt.replicas[host] = jax.device_put(rt.params,
+                                               self.device_map[host])
+        return rt.replicas[host]
+
+    # -- batched-apply path (serving.scheduler) -------------------------
+    def apply_module(self, module_name: str, x: Any, *,
+                     host: str | None = None) -> tuple[Any, str | None]:
+        """Run one (possibly batched) module call on ``host`` without
+        blocking — XLA dispatch is async; callers block when they
+        consume the output.  Returns (output, host_actually_used)."""
+        rt = self.runtimes[module_name]
+        used = host if host is not None and host in self.device_map else rt.host
+        params = self.params_on(module_name, used)
+        x = jax.device_put(x, self._device_for(used))
+        return rt.apply(params, x), used
+
+    def apply_head(self, module_name: str, enc_outputs: dict[str, Any],
+                   head_extra: dict | None = None, *,
+                   host: str | None = None) -> tuple[Any, str | None]:
+        """Head call: encoder outputs (by modality) move to the head's
+        device — the paper's encoder->head transfer."""
+        rt = self.runtimes[module_name]
+        used = host if host is not None and host in self.device_map else rt.host
+        params = self.params_on(module_name, used)
+        dev = self._device_for(used)
+        moved = {k: jax.device_put(v, dev) for k, v in enc_outputs.items()}
+        return rt.apply(params, moved, **(head_extra or {})), used
 
     # -- inference ------------------------------------------------------
     def infer(self, model_name: str, inputs: dict[str, Any],
@@ -151,11 +230,11 @@ class S2M3Engine:
         # device_put moves the modality payload to the hosting device
         pending: dict[str, Any] = {}
         for enc in model.encoders:
-            rt = self.runtimes[enc.name]
             t0 = time.perf_counter()
-            x = jax.device_put(inputs[enc.modality], rt.device)
-            out = rt.apply(rt.params, x)
+            out, used = self.apply_module(enc.name, inputs[enc.modality])
             pending[enc.modality] = (enc.name, out, t0)
+            if used:
+                devices[enc.name] = used
 
         enc_outputs = {}
         for modality, (name, out, t0) in pending.items():
@@ -163,14 +242,13 @@ class S2M3Engine:
             timeline.append((name, "encode", t0, time.perf_counter()))
             enc_outputs[modality] = out
 
-        head_rt = self.runtimes[model.head.name]
         t0 = time.perf_counter()
-        moved = {k: jax.device_put(v, head_rt.device)
-                 for k, v in enc_outputs.items()}
-        result = head_rt.apply(head_rt.params, moved,
-                               **(head_extra or {}))
+        result, used = self.apply_head(model.head.name, enc_outputs,
+                                       head_extra)
         result = jax.block_until_ready(result)
         timeline.append((model.head.name, "head", t0, time.perf_counter()))
+        if used:
+            devices[model.head.name] = used
 
         return InferenceResult(
             model=model_name, output=result, encoder_outputs=enc_outputs,

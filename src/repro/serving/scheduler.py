@@ -1,0 +1,341 @@
+"""Continuous-batching serving scheduler: shared *compute*, not just
+shared weights.
+
+The paper's §IV-B sharing argument is about deployment cost — one CLIP
+text encoder serves VQA, retrieval, and captioning.  This scheduler
+extends the argument to execution: requests from *different tasks* that
+route through the same module are coalesced into one batched device
+call, so a single text-encoder launch serves a VQA request, a retrieval
+request, and a captioning request simultaneously.
+
+Architecture
+============
+
+* **Per-module request queues.**  ``submit()`` decomposes a
+  ``Request`` into one stage per encoder module (head-only models get a
+  head stage directly).  Each stage lands in its module's FIFO queue.
+* **Admission control / backpressure.**  A queue deeper than
+  ``max_queue_depth`` refuses new work: ``admission="block"`` drains
+  scheduler steps until the queue recedes (the submitting producer is
+  slowed down); ``admission="reject"`` raises ``QueueFull`` so an
+  upstream load-balancer can shed.
+* **Batch formation.**  Each ``step()`` services the deepest queue —
+  the one with the most coalescing opportunity — popping up to
+  ``max_batch`` stages whose payloads are stack-compatible (same dtype
+  and trailing dims; the leading axis is the batch axis).  The stacked
+  call runs once on the routed host and the output is split back
+  per-request, so every request's result is the same as its solo
+  ``submit()`` (per-example math is independent; only XLA fusion order
+  differs, hence allclose rather than bit-equal across batch sizes).
+* **Real queue-aware routing.**  The scheduler keeps a per-host
+  ``device_free`` occupancy map in *predicted* seconds: after
+  dispatching a k-batch of module m to host h it advances h's
+  busy-until by ``t_comp(m, h) * batch_factor(k)``.  That map — a
+  ``core.routing.QueueSnapshot`` — feeds ``RouteQuery.device_free``,
+  so the ``queue_aware`` policy ranks replica hosts by live load
+  instead of the engine's always-empty deploy-time queue, and the
+  engine's own ``queue_probe`` hook lets deploy/replan-time routing see
+  the same state.
+* **Heads run per-request** (their inputs are modality-keyed dicts plus
+  request-specific ``head_extra`` kwargs — stacking them would change
+  semantics), but they still flow through module queues so the stats
+  cover the whole pipeline.
+
+Batching model vs. the paper's footnote-4 fit
+=============================================
+
+The paper models a batched module call as
+``t(k) = t(1) * (0.684 + 0.316 k)`` — the linear fit of its footnote-4
+measurements (1.28 s / 4.90 s / 9.16 s at batch 1/10/20): a fixed
+launch cost amortized over k requests, with per-request marginal cost
+~0.316 t(1).  This scheduler *realizes* that regime — one launch per
+formed batch — and reuses the same ``batch_factor(k)`` fit for its
+occupancy predictions, so the simulator's batched-latency predictions
+and the scheduler's routing estimates speak one language and the
+emitted queue/batch-occupancy stats are directly checkable against
+``simulate(coalesce_window=...)`` runs.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import QueueSnapshot, Request, batch_factor
+from repro.serving.engine import InferenceResult, S2M3Engine
+
+
+class QueueFull(RuntimeError):
+    """Admission refused: a module queue is at ``max_queue_depth`` and
+    the scheduler was configured with ``admission="reject"``."""
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 8            # stages per formed module batch
+    max_queue_depth: int = 32     # per-module admission limit
+    admission: str = "block"      # "block" (drain) | "reject" (QueueFull)
+
+    def __post_init__(self):
+        if self.max_batch < 1 or self.max_queue_depth < 1:
+            raise ValueError("max_batch and max_queue_depth must be >= 1")
+        if self.admission not in ("block", "reject"):
+            raise ValueError(f"unknown admission mode {self.admission!r}")
+
+
+@dataclass
+class ModuleStats:
+    """Per-module serving counters; what makes the simulator's
+    batching predictions checkable against reality."""
+
+    module: str
+    n_calls: int = 0                      # device calls (formed batches)
+    n_stages: int = 0                     # request-stages served
+    batch_sizes: list[int] = field(default_factory=list)
+    cross_task_batches: int = 0           # batches mixing >= 2 models
+    max_depth: int = 0                    # peak queue depth observed
+
+    @property
+    def mean_occupancy(self) -> float:
+        return (sum(self.batch_sizes) / len(self.batch_sizes)
+                if self.batch_sizes else 0.0)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "module": self.module, "calls": self.n_calls,
+            "stages": self.n_stages,
+            "mean_occupancy": round(self.mean_occupancy, 3),
+            "max_batch": max(self.batch_sizes, default=0),
+            "cross_task_batches": self.cross_task_batches,
+            "max_depth": self.max_depth,
+        }
+
+
+@dataclass
+class _Stage:
+    rid: int
+    module: str
+    request: Request
+    x: Any = None                         # encoder payload (None for heads)
+
+
+@dataclass
+class _InFlight:
+    request: Request
+    t_admit: float
+    pending: set[str]                     # encoder module names outstanding
+    enc_outputs: dict[str, Any] = field(default_factory=dict)
+    devices: dict[str, str] = field(default_factory=dict)
+    timeline: list = field(default_factory=list)
+
+
+class ServeScheduler:
+    """Continuous-batching core over a live ``S2M3Engine``."""
+
+    def __init__(self, engine: S2M3Engine, *,
+                 config: SchedulerConfig | None = None):
+        self.engine = engine
+        self.cfg = config or SchedulerConfig()
+        self.queues: dict[str, deque[_Stage]] = {}
+        self.stats: dict[str, ModuleStats] = {}
+        self.inflight: dict[int, _InFlight] = {}
+        self.results: dict[int, InferenceResult] = {}
+        self._free_at: dict[str, float] = {}   # host -> predicted busy-until
+        self._epoch = time.perf_counter()
+        # the engine's routing now sees real queues, not empty ones
+        engine.queue_probe = self.snapshot
+
+    # -- introspection --------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._epoch
+
+    def snapshot(self) -> QueueSnapshot:
+        return QueueSnapshot(
+            t=self._now(),
+            device_free=tuple(sorted(self._free_at.items())),
+            depths=tuple(sorted((m, len(q))
+                                for m, q in self.queues.items())))
+
+    def queue_depths(self) -> dict[str, int]:
+        return {m: len(q) for m, q in self.queues.items() if q}
+
+    def stats_dict(self) -> dict[str, dict[str, Any]]:
+        return {m: st.as_dict() for m, st in sorted(self.stats.items())}
+
+    @property
+    def cross_task_batches(self) -> int:
+        return sum(st.cross_task_batches for st in self.stats.values())
+
+    # -- admission ------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Admit one request: split into per-module stages and enqueue,
+        applying backpressure when a target queue is at depth."""
+        model = self.engine.registry.models[request.model]
+        if model.encoders and request.inputs is None:
+            raise ValueError(
+                f"request {request.rid} has no inputs payload; serving "
+                "needs Request(inputs={modality: array})")
+        targets = ([m.name for m in model.encoders]
+                   if model.encoders else [model.head.name])
+        for t in targets:
+            while len(self.queues.get(t, ())) >= self.cfg.max_queue_depth:
+                if self.cfg.admission == "reject":
+                    raise QueueFull(
+                        f"module queue {t!r} at max_queue_depth="
+                        f"{self.cfg.max_queue_depth}")
+                if not self.step():
+                    break                 # nothing serviceable: admit anyway
+        fl = _InFlight(request, self._now(),
+                       pending={m.name for m in model.encoders})
+        self.inflight[request.rid] = fl
+        if model.encoders:
+            for enc in model.encoders:
+                self._enqueue(_Stage(request.rid, enc.name, request,
+                                     x=request.inputs[enc.modality]))
+        else:
+            self._enqueue(_Stage(request.rid, model.head.name, request))
+
+    def _enqueue(self, stage: _Stage) -> None:
+        q = self.queues.setdefault(stage.module, deque())
+        q.append(stage)
+        st = self.stats.setdefault(stage.module, ModuleStats(stage.module))
+        st.max_depth = max(st.max_depth, len(q))
+
+    # -- scheduling -----------------------------------------------------
+    def step(self) -> bool:
+        """Service the deepest non-empty queue (most coalescing
+        opportunity); returns False when there is nothing to do."""
+        module = max((m for m, q in self.queues.items() if q),
+                     key=lambda m: len(self.queues[m]), default=None)
+        if module is None:
+            return False
+        self._service(module)
+        return True
+
+    def drain(self) -> dict[int, InferenceResult]:
+        while self.step():
+            pass
+        return self.results
+
+    def serve(self, workload: list[Request]) -> list[InferenceResult]:
+        """Drain a whole workload: admit in arrival order (backpressure
+        included), run to completion, return results in workload order."""
+        for q in sorted(workload, key=lambda r: (r.arrival, r.rid)):
+            self.submit(q)
+        self.drain()
+        return [self.results[q.rid] for q in workload]
+
+    # -- execution ------------------------------------------------------
+    def _service(self, module: str) -> None:
+        q = self.queues[module]
+        head = q.popleft()
+        spec = self.engine.registry.modules.get(module)
+        if spec is not None and spec.kind == "encoder":
+            batch, skipped = [head], []
+            sig = self._shape_sig(head.x)
+            while q and len(batch) < self.cfg.max_batch:
+                s = q.popleft()
+                if sig is not None and self._shape_sig(s.x) == sig:
+                    batch.append(s)
+                else:
+                    skipped.append(s)     # incompatible payload: stays FIFO
+            q.extendleft(reversed(skipped))
+            self._run_encoder_batch(module, batch)
+        else:
+            self._run_head(module, head)
+
+    @staticmethod
+    def _shape_sig(x) -> tuple | None:
+        """Stack-compatibility signature: leading axis is the batch
+        axis, everything else must match."""
+        if not hasattr(x, "shape") or not hasattr(x, "dtype"):
+            return None
+        if len(x.shape) < 1:
+            return None
+        return (x.shape[1:], str(x.dtype))
+
+    def _route(self, module: str, stage: _Stage) -> str | None:
+        return self.engine.route_module(
+            module, device_free=dict(self._free_at), ready_time=self._now(),
+            source=stage.request.source, request=stage.request)
+
+    def _charge(self, module: str, host: str | None, k: int,
+                t_dispatch: float) -> None:
+        """Advance the host's predicted busy-until by the footnote-4
+        batched-call estimate — the scheduler-side mirror of the
+        simulator's device_free bookkeeping."""
+        eng = self.engine
+        spec = eng.registry.modules.get(module)
+        if host is None or eng.cluster is None or spec is None:
+            return
+        try:
+            dev = eng.cluster.device(host)
+        except KeyError:
+            return
+        t_est = eng.cluster.t_comp(spec, dev) * batch_factor(k)
+        self._free_at[host] = max(self._free_at.get(host, 0.0),
+                                  t_dispatch) + t_est
+
+    def _bookkeep(self, module: str, batch: list[_Stage]) -> ModuleStats:
+        st = self.stats.setdefault(module, ModuleStats(module))
+        st.n_calls += 1
+        st.n_stages += len(batch)
+        st.batch_sizes.append(len(batch))
+        if len({s.request.model for s in batch}) >= 2:
+            st.cross_task_batches += 1
+        return st
+
+    def _run_encoder_batch(self, module: str, batch: list[_Stage]) -> None:
+        host = self._route(module, batch[0])
+        t0 = self._now()
+        if len(batch) == 1:
+            out, used = self.engine.apply_module(module, batch[0].x,
+                                                 host=host)
+            outs = [out]
+        else:
+            xs = [jnp.asarray(s.x) for s in batch]
+            sizes = np.cumsum([x.shape[0] for x in xs])[:-1]
+            out, used = self.engine.apply_module(
+                module, jnp.concatenate(xs, axis=0), host=host)
+            outs = jnp.split(out, sizes, axis=0)   # async: no block here
+        self._charge(module, used, len(batch), t0)
+        self._bookkeep(module, batch)
+        t1 = self._now()
+        modality = self.engine.registry.modules[module].modality
+        for s, o in zip(batch, outs):
+            fl = self.inflight[s.rid]
+            fl.enc_outputs[modality] = o
+            if used:
+                fl.devices[module] = used
+            fl.timeline.append((module, "encode", t0, t1))
+            fl.pending.discard(module)
+            if not fl.pending:
+                head_name = self.engine.registry.models[
+                    s.request.model].head.name
+                self._enqueue(_Stage(s.rid, head_name, s.request))
+
+    def _run_head(self, module: str, stage: _Stage) -> None:
+        fl = self.inflight.pop(stage.rid)
+        host = self._route(module, stage)
+        t0 = self._now()
+        out, used = self.engine.apply_head(
+            module, fl.enc_outputs, stage.request.head_extra, host=host)
+        out = jax.block_until_ready(out)
+        self._charge(module, used, 1, t0)
+        self._bookkeep(module, [stage])
+        t1 = self._now()
+        if used:
+            fl.devices[module] = used
+        fl.timeline.append((module, "head", t0, t1))
+        fl.enc_outputs = {k: jax.block_until_ready(v)
+                          for k, v in fl.enc_outputs.items()}
+        self.results[stage.rid] = InferenceResult(
+            model=stage.request.model, output=out,
+            encoder_outputs=fl.enc_outputs, timeline=fl.timeline,
+            latency_s=t1 - fl.t_admit, devices=fl.devices, rid=stage.rid)

@@ -8,7 +8,8 @@ from repro.core.cluster import ClusterSpec, DeviceSpec
 from repro.core.module import ModelSpec, ModuleSpec
 from repro.core.placement import Placement, greedy_place
 from repro.core.routing import (
-    Request, batch_factor, coalesce_batches, simulate, timeline_ascii,
+    Request, SimResult, batch_factor, coalesce_batches, simulate,
+    timeline_ascii,
 )
 
 
@@ -145,6 +146,82 @@ def test_coalesce_batches_preserves_work():
         window=1.0)
     assert mixed[0].work_of("text") == 100.0
     assert mixed[0].work_of("vision") == 2.0
+
+
+def test_head_only_requests_contend_on_uplink():
+    """Regression: head-only models shipped their raw input without
+    serializing on the source uplink, so they got free bandwidth the
+    encoder path pays for.  Two concurrent sends must queue."""
+    head = ModuleSpec("head", "head", "task", 0, input_bytes=10_000_000)
+    m = ModelSpec("m", "t", (), head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec("src", 100, 1e9), DeviceSpec("dst", 100, 1e9)],
+        default_bandwidth=10e6, default_latency=0.0,
+        comp_table={("head", "dst"): 0.0, ("head", "src"): 50.0})
+    pl = Placement(assignment={"head": ["dst"]})
+    res = simulate([Request(0, "m", "src"), Request(1, "m", "src")],
+                   pl, cluster, [m])
+    # each send takes 1.0 s on the shared uplink: r0 lands at 1.0,
+    # r1's send starts only after r0's finishes -> latency 2.0
+    assert math.isclose(res.latencies[0], 1.0, rel_tol=1e-6)
+    assert math.isclose(res.latencies[1], 2.0, rel_tol=1e-6)
+    sends = [e for e in res.events if e.kind == "comm_in"]
+    assert len(sends) == 2 and sends[1].start >= sends[0].end
+
+
+def test_head_only_send_mixes_with_encoder_sends():
+    """The head-only send shares the uplink with encoder sends of other
+    requests from the same source."""
+    vis = ModuleSpec("vis", "encoder", "vision", 10,
+                     input_bytes=10_000_000, output_bytes=0)
+    enc_m = ModelSpec("em", "t", (vis,),
+                      ModuleSpec("ehead", "head", "task", 0, input_bytes=0))
+    ho_head = ModuleSpec("hhead", "head", "task", 0, input_bytes=10_000_000)
+    ho_m = ModelSpec("hm", "t", (), ho_head)
+    cluster = ClusterSpec(
+        devices=[DeviceSpec("src", 100, 1e9), DeviceSpec("dst", 100, 1e9)],
+        default_bandwidth=10e6, default_latency=0.0,
+        comp_table={("vis", "dst"): 0.1, ("vis", "src"): 50.0,
+                    ("ehead", "dst"): 0.0, ("ehead", "src"): 50.0,
+                    ("hhead", "dst"): 0.0, ("hhead", "src"): 50.0})
+    pl = Placement(assignment={"vis": ["dst"], "ehead": ["dst"],
+                               "hhead": ["dst"]})
+    res = simulate([Request(0, "em", "src"), Request(1, "hm", "src")],
+                   pl, cluster, [enc_m, ho_m])
+    # r1's raw-input send waits for r0's encoder send (1.0 s each)
+    assert math.isclose(res.latencies[1], 2.0, rel_tol=1e-6)
+
+
+def test_max_latency_zero_for_feasible_empty_workload():
+    """Regression: a feasible empty SimResult reported max=inf, making
+    PlanReport.summary() print a bogus number."""
+    assert SimResult().max_latency == 0.0
+    assert SimResult(feasible=False).max_latency == float("inf")
+    m, cluster = _two_encoder_setup()
+    pl = Placement(assignment={"vis": ["a"], "txt": ["b"], "head": ["a"]})
+    res = simulate([], pl, cluster, [m])
+    assert res.feasible and res.max_latency == 0.0
+
+
+def test_coalesce_refuses_payload_carrying_requests():
+    """Regression: merging kept only the first request's inputs/
+    head_extra, so a coalesced Request fed to submit() silently dropped
+    the other requests' payloads.  Payload requests never merge."""
+    plain = [Request(i, "m", "a", arrival=0.01 * i) for i in range(2)]
+    loaded = [Request(10 + i, "m", "a", arrival=0.01 * i,
+                      inputs={"vision": [i]}) for i in range(2)]
+    extra = Request(20, "m", "a", arrival=0.0, head_extra={"k": 1})
+    merged = coalesce_batches(plain + loaded + [extra], window=1.0)
+    # the two plain requests merged; the three payload ones survived
+    assert len(merged) == 4
+    assert sorted(q.rid for q in merged if q.batch == 1) == [10, 11, 20]
+    [batched] = [q for q in merged if q.batch == 2]
+    assert batched.inputs is None
+    for q in merged:
+        if q.rid == 10:
+            assert q.inputs == {"vision": [0]}    # payload intact
+        if q.rid == 20:
+            assert q.head_extra == {"k": 1}
 
 
 def test_timeline_renders():

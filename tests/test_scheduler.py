@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler: cross-task shared-encoder batches,
+solo-vs-batched output equivalence, backpressure/admission control,
+real queue-depth-aware routing, and engine route/report consistency."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.s2m3_zoo import get_clip_config
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.core.placement import Placement
+from repro.models import clip as C
+from repro.s2m3 import Deployment, Request
+from repro.serving.engine import S2M3Engine
+from repro.serving.scheduler import (
+    QueueFull, SchedulerConfig, ServeScheduler,
+)
+
+GB = 1024**3
+
+
+@pytest.fixture(scope="module")
+def zoo_slice():
+    """Three tasks sharing encoders: retrieval + classification + VQA
+    (the paper's multi-task zoo in miniature)."""
+    ccfg = get_clip_config("mini-clip")
+    params = C.init_clip(jax.random.PRNGKey(0), ccfg)
+    vis = ModuleSpec("mini-vit", "encoder", "vision", 60_000,
+                     flops_per_query=2e6)
+    txt = ModuleSpec("mini-trf", "encoder", "text", 50_000,
+                     flops_per_query=1e6)
+    cos = ModuleSpec("cosine", "head", "task", 0)
+    cls = ModuleSpec("mini-cls", "head", "task", 1_000, flops_per_query=1e4)
+    lm = ModuleSpec("mini-lm", "head", "task", 80_000, flops_per_query=4e6)
+    w_lm = jax.random.normal(jax.random.PRNGKey(6),
+                             (2 * ccfg.embed_dim, 32)) * 0.3
+
+    def lm_apply(p, enc):
+        return jnp.concatenate([enc["vision"], enc["text"]], -1) @ p
+
+    models = {
+        "retrieval": ModelSpec("retrieval", "retrieval", (vis, txt), cos),
+        "classify": ModelSpec("classify", "classification", (vis,), cls),
+        "vqa": ModelSpec("vqa", "vqa-dec", (vis, txt), lm),
+    }
+    builders = {
+        "mini-vit": lambda: (partial(C.encode_image, cfg=ccfg),
+                             params["vision"]),
+        "mini-trf": lambda: (partial(C.encode_text, cfg=ccfg),
+                             params["text"]),
+        "cosine": lambda: (
+            lambda p, enc: C.retrieval_logits(enc["vision"], enc["text"], p),
+            params["logit_scale"]),
+        "mini-cls": lambda: (lambda p, enc: enc["vision"] @ p,
+                             jnp.ones((ccfg.embed_dim, 7))),
+        "mini-lm": lambda: (lm_apply, w_lm),
+    }
+    patches = jax.random.normal(jax.random.PRNGKey(1),
+                                (2, ccfg.n_image_tokens, ccfg.vision_width))
+    ids = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                             ccfg.vocab_size)
+    return dict(models=models, builders=builders,
+                inputs={"vision": patches, "text": ids})
+
+
+def _cluster(n=4):
+    return ClusterSpec(devices=[
+        DeviceSpec(f"dev{i}", 1 * GB, (2.0 if i < 2 else 1.0) * 1e9)
+        for i in range(n)
+    ])
+
+
+def _deploy(zoo_slice, **plan_kw):
+    dep = Deployment(_cluster())
+    for m in zoo_slice["models"].values():
+        dep.add_model(m, zoo_slice["builders"])
+    dep.plan(plan_kw.pop("placement", "greedy"),
+             routing=plan_kw.pop("routing", "queue_aware"), **plan_kw)
+    return dep.materialize()
+
+
+def _workload(zoo_slice, n_each=1):
+    reqs, rid = [], 0
+    for _ in range(n_each):
+        for name in ("retrieval", "classify", "vqa"):
+            inp = dict(zoo_slice["inputs"])
+            if name == "classify":
+                inp = {"vision": inp["vision"]}
+            reqs.append(Request(rid, name, "dev0", inputs=inp))
+            rid += 1
+    return reqs
+
+
+# ---- acceptance: cross-task batches, solo == batched --------------------
+
+def test_serve_forms_cross_task_batches_and_matches_solo(zoo_slice):
+    dep = _deploy(zoo_slice)
+    workload = _workload(zoo_slice, n_each=2)
+    solo = [dep.submit(q) for q in workload]
+
+    results = dep.serve(workload, max_batch=8)
+    stats = dep.scheduler.stats_dict()
+    # the shared vision encoder served >= 2 different tasks in one batch
+    assert stats["mini-vit"]["cross_task_batches"] >= 1
+    assert stats["mini-vit"]["max_batch"] >= 2
+    assert dep.scheduler.cross_task_batches >= 1
+    # batching is lossless: every request's output == its solo submit()
+    for q, r, s in zip(workload, results, solo):
+        assert r.rid == q.rid and r.model == q.model
+        np.testing.assert_allclose(np.asarray(r.output),
+                                   np.asarray(s.output), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_serve_results_in_workload_order(zoo_slice):
+    dep = _deploy(zoo_slice)
+    workload = list(reversed(_workload(zoo_slice, n_each=1)))
+    results = dep.serve(workload)
+    assert [r.rid for r in results] == [q.rid for q in workload]
+    for r in results:
+        assert r.latency_s > 0
+        assert r.devices          # routed hosts recorded per module
+
+
+def test_serve_batches_within_max_batch(zoo_slice):
+    dep = _deploy(zoo_slice)
+    dep.serve(_workload(zoo_slice, n_each=4), max_batch=3)
+    for st in dep.scheduler.stats_dict().values():
+        assert st["max_batch"] <= 3
+
+
+def test_serve_head_only_model(zoo_slice):
+    """Head-only models (no encoders) flow through the head queue."""
+    dep = _deploy(zoo_slice)
+    dep.add_model(ModelSpec(
+        "echo", "text-gen", (),
+        ModuleSpec("echo-head", "head", "task", 10)),
+        {"echo-head": lambda: (lambda p, enc: p, jnp.ones((3,)))})
+    [res] = dep.serve([Request(0, "echo", "dev0")])
+    np.testing.assert_array_equal(np.asarray(res.output), np.ones((3,)))
+
+
+# ---- admission control / backpressure -----------------------------------
+
+def test_backpressure_bounds_queue_depth(zoo_slice):
+    dep = _deploy(zoo_slice)
+    dep.serve(_workload(zoo_slice, n_each=6), max_batch=2,
+              max_queue_depth=3)
+    stats = dep.scheduler.stats_dict()
+    # admission control bounds the queues requests are admitted into
+    # (encoder stages; head stages are generated internally)
+    for name in ("mini-vit", "mini-trf"):
+        assert stats[name]["max_depth"] <= 3
+
+
+def test_reject_admission_raises_queue_full(zoo_slice):
+    dep = _deploy(zoo_slice)
+    eng = dep.engine
+    sched = ServeScheduler(eng, config=SchedulerConfig(
+        max_batch=2, max_queue_depth=2, admission="reject"))
+    reqs = _workload(zoo_slice, n_each=3)
+    with pytest.raises(QueueFull, match="max_queue_depth"):
+        for q in reqs:
+            sched.submit(q)
+    # the scheduler still drains what was admitted
+    sched.drain()
+    assert sched.results
+
+
+def test_bad_scheduler_config_rejected():
+    with pytest.raises(ValueError):
+        SchedulerConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        SchedulerConfig(admission="drop")
+
+
+def test_serve_requires_inputs(zoo_slice):
+    dep = _deploy(zoo_slice)
+    with pytest.raises(ValueError, match="no inputs"):
+        dep.serve([Request(0, "retrieval", "dev0")])
+
+
+# ---- real queue-aware routing -------------------------------------------
+
+def test_queue_aware_spreads_replicated_module_across_hosts(zoo_slice):
+    """With a replicated encoder, live occupancy must push consecutive
+    batches onto different hosts.  The cluster is compute-dominated
+    (free links, slow devices) so queueing — not comm — decides."""
+    cluster = ClusterSpec(
+        devices=[DeviceSpec(f"dev{i}", 1 * GB, 2e3) for i in range(2)],
+        default_bandwidth=1e12, default_latency=0.0)
+    dep = Deployment(cluster)
+    for m in zoo_slice["models"].values():
+        dep.add_model(m, zoo_slice["builders"])
+    dep.plan("greedy", routing="queue_aware", replicate=True).materialize()
+    hosts = dep.placement.devices_for("mini-vit")
+    if len(hosts) < 2:
+        pytest.skip("placement did not replicate mini-vit")
+    sched = ServeScheduler(dep.engine,
+                           config=SchedulerConfig(max_batch=1))
+    for q in _workload(zoo_slice, n_each=2):
+        sched.submit(q)
+    sched.drain()
+    used = {res.devices["mini-vit"] for res in sched.results.values()
+            if "mini-vit" in res.devices}
+    assert len(used) >= 2, f"queue-aware routing never spread load: {used}"
+
+
+def test_scheduler_snapshot_feeds_engine_probe(zoo_slice):
+    dep = _deploy(zoo_slice)
+    sched = ServeScheduler(dep.engine)
+    assert dep.engine.queue_probe is not None
+    for q in _workload(zoo_slice, n_each=1):
+        sched.submit(q)
+    snap = dep.engine.queue_probe()
+    assert snap.depth_of("mini-vit") >= 2      # retrieval + classify + vqa
+    sched.drain()
+    snap = sched.snapshot()
+    assert snap.depth_of("mini-vit") == 0
+    assert snap.free_map()                     # occupancy was charged
+
+
+# ---- engine route/report consistency (bugfix) ---------------------------
+
+def test_unmapped_placement_host_raises():
+    """A placement whose hosts are absent from device_map used to run on
+    an arbitrary device while reporting the unmapped host; now it
+    raises instead of letting real and reported routes diverge."""
+    spec = ModuleSpec("h", "head", "task", 10)
+    model = ModelSpec("m", "t", (), spec)
+    eng = S2M3Engine({"dev0": jax.devices()[0]})
+    eng.placement = Placement(assignment={"h": ["ghost-dev"]})
+    with pytest.raises(KeyError, match="ghost-dev"):
+        eng.deploy_model(model, {"h": lambda: (lambda p, enc: p,
+                                               jnp.ones(2))})
