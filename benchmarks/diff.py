@@ -1,0 +1,118 @@
+"""Compare two ``BENCH_<section>.json`` snapshots and flag regressions.
+
+The bench driver (``benchmarks/run.py``) snapshots every section's rows
+to the repo root; this tool diffs two such snapshots — typically the
+committed baseline vs a fresh run — and reports every latency metric
+that regressed beyond a threshold ratio::
+
+    python benchmarks/diff.py BENCH_serving.baseline.json BENCH_serving.json
+    python benchmarks/diff.py old.json new.json --threshold 1.10
+
+Rows are matched by their ``name`` field (falling back to list position
+for unnamed rows); the compared metrics are the latency-bearing keys
+(``p50_ms``, ``p99_ms``, ``us_per_call``, ``wall_s``, ``latency_s``).
+Exit status 1 when any regression exceeds the threshold, so the diff
+can gate CI.  Lower is better for every compared metric; improvements
+and new/removed rows are reported but never fail the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+#: metrics compared between snapshots — all latencies, lower is better
+METRICS = ("p50_ms", "p99_ms", "us_per_call", "wall_s", "latency_s")
+
+DEFAULT_THRESHOLD = 1.20     # flag when new > old * threshold
+
+
+@dataclass(frozen=True)
+class Regression:
+    row: str
+    metric: str
+    old: float
+    new: float
+
+    @property
+    def ratio(self) -> float:
+        return self.new / self.old if self.old else float("inf")
+
+    def format(self) -> str:
+        return (f"REGRESSION {self.row}.{self.metric}: "
+                f"{self.old:g} -> {self.new:g} ({self.ratio:.2f}x)")
+
+
+def _rows_by_name(snapshot: dict) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for i, row in enumerate(snapshot.get("rows", [])):
+        key = str(row.get("name", f"row[{i}]"))
+        if key in out:                      # duplicate names: positional
+            key = f"{key}[{i}]"
+        out[key] = row
+    return out
+
+
+def diff_snapshots(old: dict, new: dict, *,
+                   threshold: float = DEFAULT_THRESHOLD
+                   ) -> tuple[list[Regression], list[str]]:
+    """Returns (regressions beyond ``threshold``, informational notes:
+    improvements, added/removed rows, metric coverage changes)."""
+    old_rows, new_rows = _rows_by_name(old), _rows_by_name(new)
+    regressions: list[Regression] = []
+    notes: list[str] = []
+    for name in sorted(old_rows.keys() | new_rows.keys()):
+        if name not in new_rows:
+            notes.append(f"row {name!r} removed in new snapshot")
+            continue
+        if name not in old_rows:
+            notes.append(f"row {name!r} added in new snapshot")
+            continue
+        o, n = old_rows[name], new_rows[name]
+        for metric in METRICS:
+            ov, nv = o.get(metric), n.get(metric)
+            if ov is None or nv is None:
+                if (ov is None) != (nv is None):
+                    notes.append(
+                        f"{name}.{metric} present in only one snapshot")
+                continue
+            ov, nv = float(ov), float(nv)
+            if ov > 0 and nv > ov * threshold:
+                regressions.append(Regression(name, metric, ov, nv))
+            elif nv > 0 and ov > nv * threshold:
+                notes.append(f"improvement {name}.{metric}: "
+                             f"{ov:g} -> {nv:g}")
+    return regressions, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_<section>.json snapshots; exit 1 on "
+                    "latency regressions beyond --threshold")
+    ap.add_argument("old", type=Path, help="baseline snapshot")
+    ap.add_argument("new", type=Path, help="candidate snapshot")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="regression ratio (default %(default)s = +20%%)")
+    args = ap.parse_args(argv)
+
+    old = json.loads(args.old.read_text())
+    new = json.loads(args.new.read_text())
+    if old.get("section") != new.get("section"):
+        print(f"note: comparing different sections "
+              f"{old.get('section')!r} vs {new.get('section')!r}")
+    regressions, notes = diff_snapshots(old, new,
+                                        threshold=args.threshold)
+    for note in notes:
+        print(note)
+    for r in regressions:
+        print(r.format())
+    print(f"{len(regressions)} regression(s) beyond "
+          f"{args.threshold:.2f}x, {len(notes)} note(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

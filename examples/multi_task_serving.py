@@ -85,6 +85,21 @@ def main():
           f"dedicated={report.dedicated_bytes:,} B "
           f"(saving {report.sharing_savings:.1%})")
 
+    # ---- static pre-flight: prove the plan sound before serving ----
+    # materialize()/serve() run this automatically and raise PlanError on
+    # ERROR findings; calling verify() directly returns the diagnostics.
+    from repro.analysis import format_report
+    from repro.analysis.plan_check import check_plan
+
+    print(f"\nverify(): {format_report(dep.verify()).splitlines()[-1]}")
+    import copy
+
+    tampered = copy.deepcopy(dep.placement)
+    tampered.module_bytes["mini-vit"] = 10**12   # pretend a 1 TB encoder
+    finding = check_plan(tampered, pool, dep.models)[0]
+    print(f"tampered ledger is rejected statically -> {finding.code} "
+          f"[{finding.entity}]")
+
     # ---- the same Request drives prediction AND real compute ----
     rng = jax.random.PRNGKey(1)
     patches = jax.random.normal(rng, (4, ccfg.n_image_tokens,

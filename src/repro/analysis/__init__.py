@@ -1,0 +1,65 @@
+"""repro.analysis — static analysis for S2M3 deployments.
+
+Three passes, all device-free, all returning structured ``Diagnostic``
+objects (severity, stable code, anchoring entity, fix hint):
+
+* **plan verifier** (``plan_check``) — per-device memory ledgers vs
+  capacity, module→host mapping completeness, dependency-graph
+  acyclicity, route reachability, registry refcount consistency, and
+  sharing legality (shared encoders must agree on shape/dtype fields);
+* **kernel checker** (``kernel_check``) — abstract-evals the Pallas
+  kernels (``jax.eval_shape``, no device execution) for the zoo's real
+  shapes: grid/BlockSpec divisibility, per-block VMEM footprint vs a
+  configurable budget, output shape/dtype drift vs ``kernels/ref.py``;
+* **concurrency lint** (``concurrency_lint``) — AST pass over the
+  serving layer: shared-state mutation outside the scheduler lock, JAX
+  dispatch while holding the lock, registry mutation from
+  batch-coalescing paths.
+
+Severities (``Severity``): **ERROR** means executing the plan would
+fail (OOM, KeyError, race) — ``Deployment`` pre-flights raise
+``PlanError`` and the CLI exits non-zero; **WARNING** means
+likely-wrong but executable (VMEM over budget, ignored plan option) —
+pre-flights log these; **INFO** is an observation (kernel grid/VMEM
+summaries).
+
+Entry points: ``Deployment.verify()`` (and the automatic pre-flight in
+``materialize()``/``serve()``), or the CLI::
+
+    python -m repro.analysis --self         # lint this repo, kernel-check
+                                            # the zoo; exit 1 on ERROR
+    python -m repro.analysis path/to/file.py --kernels
+
+``--self`` is the CI/tier-1 mode: it lints the installed ``repro``
+package sources and sweeps every kernel entry point over the zoo's
+shapes.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.diagnostics import (
+    Diagnostic, PlanError, Severity, errors, format_report, warnings,
+)
+
+__all__ = [
+    "Diagnostic", "PlanError", "Severity", "errors", "format_report",
+    "warnings", "verify_deployment",
+]
+
+
+def verify_deployment(dep, *, kernels: bool = False,
+                      vmem_budget: int | None = None) -> list[Diagnostic]:
+    """Run the static plan verifier (and optionally the kernel checker)
+    against a ``s2m3.Deployment``.  Pure inspection: raises nothing,
+    returns the finding list for the caller's policy."""
+    from repro.analysis.plan_check import check_plan
+
+    placement = dep._ensure_plan()
+    diags = check_plan(
+        placement, dep.cluster, dep.models, registry=dep.registry,
+        placement_name=dep._placement_name, plan_opts=dep._plan_opts)
+    if kernels:
+        from repro.analysis.kernel_check import check_kernels
+
+        diags = diags + check_kernels(vmem_budget=vmem_budget)
+    return diags

@@ -1,0 +1,69 @@
+"""CLI for the static analysis passes.
+
+    python -m repro.analysis --self              # CI mode: lint the repro
+                                                 # package + kernel sweep
+    python -m repro.analysis src/repro/serving   # lint specific paths
+    python -m repro.analysis --kernels           # kernel checker only
+
+Exit status 1 when any ERROR-severity finding is emitted (WARNING/INFO
+never fail the run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.diagnostics import errors, format_report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static plan/kernel/concurrency analysis for the "
+                    "S2M3 reproduction")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories to run the concurrency "
+                         "lint over")
+    ap.add_argument("--self", dest="self_mode", action="store_true",
+                    help="lint the installed repro package sources and "
+                         "run the zoo kernel sweep (the tier-1/CI mode)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the Pallas kernel checker over the zoo's "
+                         "shapes (jax.eval_shape only, no devices)")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="per-core VMEM budget for kernel working sets "
+                         "(default 16 MiB)")
+    args = ap.parse_args(argv)
+
+    run_kernels = args.kernels or args.self_mode or not args.paths
+    diags = []
+
+    if args.self_mode:
+        import repro
+
+        from repro.analysis.concurrency_lint import lint_paths
+
+        # repro may be a namespace package (__file__ is None): use __path__
+        diags += lint_paths([Path(p) for p in repro.__path__])
+    elif args.paths:
+        from repro.analysis.concurrency_lint import lint_paths
+
+        diags += lint_paths(args.paths)
+    else:
+        from repro.analysis.concurrency_lint import lint_serving
+
+        diags += lint_serving()
+
+    if run_kernels:
+        from repro.analysis.kernel_check import check_kernels
+
+        diags += check_kernels(vmem_budget=args.vmem_budget)
+
+    print(format_report(diags))
+    return 1 if errors(diags) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,277 @@
+"""Static Pallas kernel checker — no device execution.
+
+For every kernel entry point in ``repro.kernels.ops`` and every shape
+the zoo actually serves (gemma2-9b, llama3-8b, whisper-tiny, zamba2-7b,
+xlstm-1.3b, mini-clip), this pass:
+
+* computes the kernel's ``BlockPlan`` (``repro.kernels.plan``) — invalid
+  grid/BlockSpec geometry becomes ``kernel/block-divisibility`` or
+  ``kernel/invalid-geometry`` ERRORs instead of a trace-time crash;
+* compares the per-program VMEM working set against a configurable
+  budget (default 16 MiB/core) — ``kernel/vmem-budget`` WARNING;
+* abstract-evals the real entry point with ``jax.eval_shape`` (traces
+  the kernel body, runs nothing) and diffs the output pytree against
+  the ``kernels/ref.py`` oracle — ``kernel/shape-drift`` /
+  ``kernel/dtype-drift`` ERRORs.
+
+Everything here is shape-level: it is safe to run on a CPU-only box and
+in CI on every commit.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+_MB = 1024 ** 2
+
+#: the five public kernel entry points the checker must cover
+ENTRY_POINTS = ("flash_attention", "decode_attention", "ssd_chunked",
+                "ssd_intra_chunk", "slstm_scan")
+
+
+@dataclass(frozen=True)
+class KernelCase:
+    """One (entry point, zoo shape) combination to vet."""
+
+    name: str                    # e.g. "gemma2-9b/global-prefill"
+    entry: str                   # key into repro.kernels.ops
+    args: tuple                  # jax.ShapeDtypeStruct operands
+    kwargs: dict = field(default_factory=dict)
+    plan_fn: Callable[[], Any] | None = None      # -> BlockPlan, may raise
+    expected_fn: Callable[[], Any] | None = None  # -> pytree of structs
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _flash_case(name, *, B, S, H, D, T, K, dtype="bfloat16",
+                causal=True, window=0, softcap=0.0,
+                block_q=256, block_k=256):
+    from repro.kernels import ref
+    from repro.kernels.plan import flash_block_plan
+
+    q = _sds((B, S, H, D), dtype)
+    kv = _sds((B, T, K, D), dtype)
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              block_q=block_q, block_k=block_k)
+
+    def expected():
+        import jax
+
+        return jax.eval_shape(functools.partial(
+            ref.flash_attention_ref, causal=causal, window=window,
+            softcap=softcap), q, kv, kv)
+
+    return KernelCase(
+        name, "flash_attention", (q, kv, kv), kw,
+        plan_fn=lambda: flash_block_plan(B, S, H, D, T, K,
+                                         block_q, block_k, dtype),
+        expected_fn=expected)
+
+
+def _decode_case(name, *, B, H, D, T, K, dtype="bfloat16",
+                 softcap=0.0, block_k=512):
+    from repro.kernels import ref
+    from repro.kernels.plan import decode_block_plan
+
+    q = _sds((B, H, D), dtype)
+    kv = _sds((B, T, K, D), dtype)
+    lengths = _sds((B,), "int32")
+
+    def expected():
+        import jax
+
+        return jax.eval_shape(functools.partial(
+            ref.decode_attention_ref, softcap=softcap), q, kv, kv, lengths)
+
+    return KernelCase(
+        name, "decode_attention", (q, kv, kv, lengths),
+        dict(softcap=softcap, block_k=block_k),
+        plan_fn=lambda: decode_block_plan(B, H, D, T, K, block_k, dtype),
+        expected_fn=expected)
+
+
+def _ssd_cases(name, *, B, S, H, P, N, chunk, dtype="bfloat16"):
+    from repro.kernels import ref
+    from repro.kernels.plan import ssd_block_plan
+
+    x = _sds((B, S, H, P), dtype)
+    BC = _sds((B, S, N), dtype)
+    dt = _sds((B, S, H), dtype)
+    alog = _sds((H,), "float32")
+
+    def chunked_expected():
+        import jax
+
+        return jax.eval_shape(ref.ssd_chunk_ref, x, BC, BC, dt, alog)
+
+    chunked = KernelCase(
+        f"{name}/chunked", "ssd_chunked", (x, BC, BC, dt, alog),
+        dict(chunk=chunk),
+        plan_fn=lambda: ssd_block_plan(B, S, H, P, N, chunk, dtype),
+        expected_fn=chunked_expected)
+
+    L = min(chunk, S)
+    nc = max(S // L, 1)
+    xi = _sds((B, nc, L, H, P), dtype)
+    BCi = _sds((B, nc, L, N), dtype)
+    dti = _sds((B, nc, L, H), dtype)
+    # intra-chunk contract (kernels.ssd_scan docstring): y per-chunk
+    # output, S_loc outgoing states, Lam chunk decays — all fp32
+    intra = KernelCase(
+        f"{name}/intra-chunk", "ssd_intra_chunk", (xi, BCi, BCi, dti, alog),
+        plan_fn=lambda: ssd_block_plan(B, S, H, P, N, chunk, dtype),
+        expected_fn=lambda: (_sds((B, nc, L, H, P), "float32"),
+                             _sds((B, nc, H, N, P), "float32"),
+                             _sds((B, nc, H), "float32")))
+    return [chunked, intra]
+
+
+def _slstm_case(name, *, B, S, d, H, hd, dtype="bfloat16", block_s=128):
+    from repro.kernels import ref
+    from repro.kernels.plan import slstm_block_plan
+
+    pre = _sds((B, S, 4, d), dtype)
+    R = _sds((4, H, hd, hd), dtype)
+
+    def expected():
+        import jax
+
+        return jax.eval_shape(ref.slstm_cell_ref, pre, R)
+
+    return KernelCase(
+        name, "slstm_scan", (pre, R), dict(block_s=block_s),
+        plan_fn=lambda: slstm_block_plan(B, S, d, H, hd, block_s, dtype),
+        expected_fn=expected)
+
+
+def zoo_cases() -> list[KernelCase]:
+    """The shapes the zoo's full() configs actually run, one case per
+    (entry point, architecture) pair.  whisper-tiny's 1500-step audio
+    encoder is checked at its padded S=1536 (1500 is not divisible by
+    any power-of-two block; the deployment pads)."""
+    from repro.configs import (
+        gemma2_9b, llama3_8b, whisper_tiny, xlstm_1_3b, zamba2_7b,
+    )
+
+    g = gemma2_9b.full()
+    l3 = llama3_8b.full()
+    wt = whisper_tiny.full()
+    zb = zamba2_7b.full()
+    xl = xlstm_1_3b.full()
+
+    cases = [
+        _flash_case("gemma2-9b/global-prefill", B=1, S=2048,
+                    H=g.n_heads, D=g.head_dim, T=2048, K=g.n_kv_heads,
+                    softcap=g.attn_logit_softcap),
+        _flash_case("gemma2-9b/local-prefill", B=1, S=2048,
+                    H=g.n_heads, D=g.head_dim, T=2048, K=g.n_kv_heads,
+                    softcap=g.attn_logit_softcap, window=g.sliding_window),
+        _flash_case("llama3-8b/prefill", B=1, S=2048,
+                    H=l3.n_heads, D=l3.head_dim, T=2048, K=l3.n_kv_heads),
+        _flash_case("whisper-tiny/audio-prefill-padded", B=1, S=1536,
+                    H=wt.n_heads, D=wt.head_dim, T=1536, K=wt.n_kv_heads,
+                    causal=False),
+        _flash_case("mini-clip/vision", B=8, S=16, H=4, D=16, T=16, K=4),
+        _decode_case("gemma2-9b/decode", B=4, H=g.n_heads, D=g.head_dim,
+                     T=4096, K=g.n_kv_heads, softcap=g.attn_logit_softcap),
+        _decode_case("llama3-8b/decode", B=4, H=l3.n_heads, D=l3.head_dim,
+                     T=8192, K=l3.n_kv_heads),
+        _slstm_case("xlstm-1.3b/scan", B=1, S=512, d=xl.d_model,
+                    H=xl.n_heads, hd=xl.d_model // xl.n_heads,
+                    block_s=xl.xlstm_chunk),
+    ]
+    d_inner = zb.d_model * zb.mamba_expand
+    cases += _ssd_cases("zamba2-7b", B=1, S=1024,
+                        H=d_inner // zb.mamba_head_dim,
+                        P=zb.mamba_head_dim, N=zb.ssm_state,
+                        chunk=zb.mamba_chunk)
+    return cases
+
+
+def check_case(case: KernelCase,
+               *, vmem_budget: int | None = None) -> list[Diagnostic]:
+    import jax
+
+    from repro.kernels import ops
+    from repro.kernels.plan import VMEM_BYTES, KernelPlanError
+
+    budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+    diags: list[Diagnostic] = []
+
+    if case.plan_fn is not None:
+        try:
+            plan = case.plan_fn()
+        except KernelPlanError as e:
+            return [Diagnostic(
+                Severity.ERROR, "kernel/block-divisibility", str(e),
+                entity=case.name,
+                hint="pad the sequence or pass a block size that divides "
+                     "it — see repro.kernels.plan")]
+        diags.append(Diagnostic(
+            Severity.INFO, "kernel/summary",
+            f"{case.entry}: grid={plan.grid}, "
+            f"vmem~{plan.vmem_bytes / _MB:.2f} MB", entity=case.name))
+        if plan.vmem_bytes > budget:
+            diags.append(Diagnostic(
+                Severity.WARNING, "kernel/vmem-budget",
+                f"{case.entry} working set ~{plan.vmem_bytes / _MB:.2f} MB "
+                f"exceeds the {budget / _MB:.0f} MB VMEM budget",
+                entity=case.name,
+                hint="shrink block_q/block_k/block_s for this shape"))
+
+    entry = getattr(ops, case.entry)
+    try:
+        got = jax.eval_shape(functools.partial(entry, **case.kwargs),
+                             *case.args)
+    except Exception as e:  # tracing surfaced a real bug — report, don't die
+        diags.append(Diagnostic(
+            Severity.ERROR, "kernel/abstract-eval",
+            f"{case.entry} failed abstract evaluation: "
+            f"{type(e).__name__}: {e}", entity=case.name))
+        return diags
+
+    if case.expected_fn is not None:
+        want = case.expected_fn()
+        got_l = jax.tree_util.tree_leaves(got)
+        want_l = jax.tree_util.tree_leaves(want)
+        if len(got_l) != len(want_l):
+            diags.append(Diagnostic(
+                Severity.ERROR, "kernel/shape-drift",
+                f"{case.entry} returns {len(got_l)} array(s), oracle "
+                f"returns {len(want_l)}", entity=case.name))
+            return diags
+        for i, (gleaf, wleaf) in enumerate(zip(got_l, want_l)):
+            if tuple(gleaf.shape) != tuple(wleaf.shape):
+                diags.append(Diagnostic(
+                    Severity.ERROR, "kernel/shape-drift",
+                    f"{case.entry} output[{i}] shape "
+                    f"{tuple(gleaf.shape)} != oracle {tuple(wleaf.shape)}",
+                    entity=case.name,
+                    hint="kernel and kernels/ref.py disagree — fix "
+                         "whichever drifted"))
+            elif gleaf.dtype != wleaf.dtype:
+                diags.append(Diagnostic(
+                    Severity.ERROR, "kernel/dtype-drift",
+                    f"{case.entry} output[{i}] dtype {gleaf.dtype} != "
+                    f"oracle {wleaf.dtype}", entity=case.name,
+                    hint="check the final astype in the kernel epilogue"))
+    return diags
+
+
+def check_kernels(*, vmem_budget: int | None = None,
+                  cases: list[KernelCase] | None = None) -> list[Diagnostic]:
+    """Run every case (default: the full zoo sweep) and concatenate
+    findings.  Covers all of ``ENTRY_POINTS`` by construction."""
+    cs = zoo_cases() if cases is None else cases
+    diags: list[Diagnostic] = []
+    for c in cs:
+        diags.extend(check_case(c, vmem_budget=vmem_budget))
+    return diags

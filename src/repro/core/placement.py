@@ -43,6 +43,26 @@ class Placement:
     def bytes_on(self, device_name: str, modules: dict[str, ModuleSpec]) -> int:
         return sum(modules[m].mem_bytes for m in self.modules_on(device_name))
 
+    def bytes_used_on(self, device_name: str,
+                      module_bytes: dict[str, int] | None = None) -> int:
+        """Ledger bytes a device carries, from a bytes-per-key map
+        (defaults to ``self.module_bytes``; unknown keys count 0)."""
+        mb = module_bytes if module_bytes is not None else self.module_bytes
+        return sum(mb.get(m, 0) for m in self.modules_on(device_name))
+
+    def ledger(self, devices,
+               module_bytes: dict[str, int] | None = None
+               ) -> dict[str, dict[str, int]]:
+        """Per-device used/capacity/free memory ledger — the single
+        source of truth behind ``PlanReport.memory`` and the static
+        ``repro.analysis`` plan verifier."""
+        out = {}
+        for dev in devices:
+            used = self.bytes_used_on(dev.name, module_bytes)
+            out[dev.name] = {"used": used, "capacity": dev.mem_capacity,
+                             "free": dev.mem_capacity - used}
+        return out
+
     def max_device_bytes(self, modules: dict[str, ModuleSpec]) -> int:
         devs = {d for lst in self.assignment.values() for d in lst}
         if not devs:

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import decode_block_plan
+
 NEG_INF = -2.0e38
 
 
@@ -74,10 +76,8 @@ def decode_attention(
     """q: (B,H,D); k/v: (B,T,K,D); lengths: (B,) ints. Returns (B,H,D)."""
     B, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
-    G = H // K
-    bk = min(block_k, T)
-    assert T % bk == 0
-    n_kv = T // bk
+    plan = decode_block_plan(B, H, D, T, K, block_k, q.dtype)
+    G, bk, n_kv = plan.meta["G"], plan.meta["bk"], plan.meta["n_kv"]
     scale = 1.0 / math.sqrt(D)
 
     qf = q.reshape(B * H, 1, D)

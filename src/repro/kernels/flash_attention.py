@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import flash_block_plan
+
 NEG_INF = -2.0e38
 
 
@@ -103,11 +105,9 @@ def flash_attention(
     """
     B, S, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
-    G = H // K
-    bq = min(block_q, S)
-    bk = min(block_k, T)
-    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
-    n_kv = T // bk
+    plan = flash_block_plan(B, S, H, D, T, K, block_q, block_k, q.dtype)
+    G, bq, bk = plan.meta["G"], plan.meta["bq"], plan.meta["bk"]
+    n_kv = plan.meta["n_kv"]
     scale = 1.0 / math.sqrt(D)
 
     # layout: (B*H, S, D) for q/o; k/v stay (B, T, K, D), GQA via index map

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.plan import ssd_block_plan
 from repro.kernels.ssd_scan import ssd_chunked as _ssd_chunked
 from repro.kernels.ssd_scan import ssd_intra_chunk as _ssd_intra
 
@@ -32,9 +33,8 @@ def ssd_chunked(x, Bm, Cm, dt, A_log, *, chunk=128, initial_state=None,
     """Unchunked interface: x (B,S,H,P), Bm/Cm (B,S,N), dt (B,S,H)."""
     B, S, H, P = x.shape
     N = Bm.shape[-1]
-    L = min(chunk, S)
-    assert S % L == 0
-    nc = S // L
+    plan = ssd_block_plan(B, S, H, P, N, chunk, x.dtype)
+    L, nc = plan.meta["L"], plan.meta["nc"]
     y, final = _ssd_chunked(
         x.reshape(B, nc, L, H, P), Bm.reshape(B, nc, L, N),
         Cm.reshape(B, nc, L, N), dt.reshape(B, nc, L, H), A_log,

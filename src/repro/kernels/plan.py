@@ -1,0 +1,178 @@
+"""Static block plans for the Pallas kernels.
+
+Each kernel's grid / BlockSpec geometry is derived here by a pure
+function of the operand shapes, so it can be computed (and validated)
+in two places with one source of truth:
+
+* the kernel wrappers call their ``*_block_plan`` at trace time —
+  invalid geometry raises ``KernelPlanError`` with a fix hint instead
+  of a bare ``assert``;
+* ``repro.analysis.kernel_check`` calls the same functions to vet the
+  whole zoo's shapes statically, with no device execution.
+
+The VMEM estimate follows the TPU model in the Pallas guide: blocks
+live in ~16 MiB of VMEM per core, tiles are padded to (sublane, 128)
+where the sublane count is 8/16/32 for 4/2/1-byte dtypes, and streamed
+operands are double-buffered (x2); grid-invariant (resident) operands
+and scratch count once.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+VMEM_BYTES = 16 * 1024 * 1024          # per-core VMEM (v4/v5 ballpark)
+
+
+class KernelPlanError(ValueError):
+    """Kernel geometry is invalid for the given shapes (grid/BlockSpec
+    divisibility, head folding, gate layout)."""
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    kernel: str
+    grid: tuple[int, ...]
+    blocks: dict[str, tuple[int, ...]] = field(default_factory=dict)
+    vmem_bytes: int = 0
+    meta: dict[str, int] = field(default_factory=dict)
+
+
+def _itemsize(dtype) -> int:
+    try:
+        import numpy as np
+
+        return int(np.dtype(str(dtype).replace("bfloat16", "float16")
+                            ).itemsize)
+    except Exception:
+        return 4
+
+
+def tile_padded_bytes(shape: tuple[int, ...], dtype) -> int:
+    """Bytes of one VMEM-resident block, padded to the dtype's native
+    (sublane, 128) tile."""
+    isz = _itemsize(dtype)
+    sublane = max(8, 32 // isz)
+    dims = [d for d in shape if d > 1] or [1]
+    if len(dims) == 1:
+        dims = [1, dims[0]]
+    lead = math.prod(dims[:-2])
+    rows = -(-dims[-2] // sublane) * sublane
+    cols = -(-dims[-1] // 128) * 128
+    return lead * rows * cols * isz
+
+
+def _vmem(streamed: dict[str, tuple[tuple[int, ...], object]],
+          resident: dict[str, tuple[tuple[int, ...], object]]) -> int:
+    total = 0
+    for shape, dtype in streamed.values():
+        total += 2 * tile_padded_bytes(shape, dtype)
+    for shape, dtype in resident.values():
+        total += tile_padded_bytes(shape, dtype)
+    return total
+
+
+def _check_divides(total: int, block: int, dim: str, knob: str,
+                   kernel: str) -> None:
+    if total % block:
+        raise KernelPlanError(
+            f"{kernel}: {dim}={total} is not a multiple of the "
+            f"{knob}={block} block; pad {dim} or pass a {knob} that "
+            f"divides it")
+
+
+def flash_block_plan(B: int, S: int, H: int, D: int, T: int, K: int,
+                     block_q: int, block_k: int, dtype) -> BlockPlan:
+    """Geometry for ``flash_attention``: grid (B*H, S/bq, T/bk)."""
+    if K <= 0 or H % K:
+        raise KernelPlanError(
+            f"flash_attention: q heads H={H} must be a multiple of kv "
+            f"heads K={K} (GQA folding)")
+    bq, bk = min(block_q, S), min(block_k, T)
+    _check_divides(S, bq, "S", "block_q", "flash_attention")
+    _check_divides(T, bk, "T", "block_k", "flash_attention")
+    f32 = "float32"
+    return BlockPlan(
+        kernel="flash_attention",
+        grid=(B * H, S // bq, T // bk),
+        blocks={"q": (1, bq, D), "k": (1, bk, 1, D), "v": (1, bk, 1, D),
+                "o": (1, bq, D)},
+        vmem_bytes=_vmem(
+            streamed={"q": ((1, bq, D), dtype), "k": ((1, bk, 1, D), dtype),
+                      "v": ((1, bk, 1, D), dtype), "o": ((1, bq, D), dtype)},
+            resident={"m": ((bq,), f32), "l": ((bq,), f32),
+                      "acc": ((bq, D), f32), "scores": ((bq, bk), f32)}),
+        meta={"bq": bq, "bk": bk, "n_kv": T // bk, "G": H // K})
+
+
+def decode_block_plan(B: int, H: int, D: int, T: int, K: int,
+                      block_k: int, dtype) -> BlockPlan:
+    """Geometry for ``decode_attention``: grid (B*H, T/bk)."""
+    if K <= 0 or H % K:
+        raise KernelPlanError(
+            f"decode_attention: q heads H={H} must be a multiple of kv "
+            f"heads K={K} (GQA folding)")
+    bk = min(block_k, T)
+    _check_divides(T, bk, "T", "block_k", "decode_attention")
+    f32 = "float32"
+    return BlockPlan(
+        kernel="decode_attention",
+        grid=(B * H, T // bk),
+        blocks={"q": (1, 1, D), "k": (1, bk, 1, D), "v": (1, bk, 1, D),
+                "o": (1, 1, D)},
+        vmem_bytes=_vmem(
+            streamed={"q": ((1, 1, D), dtype), "k": ((1, bk, 1, D), dtype),
+                      "v": ((1, bk, 1, D), dtype), "o": ((1, 1, D), dtype)},
+            resident={"m": ((1,), f32), "l": ((1,), f32),
+                      "acc": ((1, D), f32), "scores": ((1, bk), f32)}),
+        meta={"bk": bk, "n_kv": T // bk, "G": H // K})
+
+
+def ssd_block_plan(B: int, S: int, H: int, P: int, N: int,
+                   chunk: int, dtype) -> BlockPlan:
+    """Geometry for ``ssd_chunked`` / ``ssd_intra_chunk``: one
+    (batch, chunk, head) program holding the (L, L) score tile."""
+    L = min(chunk, S)
+    _check_divides(S, L, "S", "chunk", "ssd_chunked")
+    nc = S // L
+    f32 = "float32"
+    return BlockPlan(
+        kernel="ssd_scan",
+        grid=(B * nc, 1, H),
+        blocks={"x": (1, 1, 1, L, P), "B": (1, 1, L, N), "C": (1, 1, L, N),
+                "dt": (1, 1, 1, L, 1), "y": (1, 1, 1, L, P),
+                "s": (1, 1, 1, N, P)},
+        vmem_bytes=_vmem(
+            streamed={"x": ((L, P), dtype), "B": ((L, N), dtype),
+                      "C": ((L, N), dtype), "dt": ((L, 1), dtype),
+                      "y": ((L, P), f32), "s": ((N, P), f32)},
+            # G, decay and the masked score matrix M all materialize at
+            # (L, L) fp32 inside the program
+            resident={"M3": ((3 * L, L), f32)}),
+        meta={"L": L, "nc": nc})
+
+
+def slstm_block_plan(B: int, S: int, d: int, H: int, hd: int,
+                     block_s: int, dtype) -> BlockPlan:
+    """Geometry for ``slstm_scan``: recurrent weights resident in VMEM,
+    gate pre-activations streamed in (block_s, 4, d) tiles."""
+    if H * hd != d:
+        raise KernelPlanError(
+            f"slstm_scan: n_heads*head_dim = {H}*{hd} != d={d} "
+            "(block-diagonal recurrence needs exact head folding)")
+    bs = min(block_s, S)
+    _check_divides(S, bs, "S", "block_s", "slstm_scan")
+    f32 = "float32"
+    return BlockPlan(
+        kernel="slstm_scan",
+        grid=(B, S // bs),
+        blocks={"pre": (1, bs, 4, d), "R": (4, H, hd, hd),
+                "o": (1, bs, d)},
+        vmem_bytes=_vmem(
+            streamed={"pre": ((1, bs, 4, d), dtype),
+                      "o": ((1, bs, d), dtype)},
+            # R's index map is grid-invariant: one resident copy
+            resident={"R": ((4, H, hd, hd), dtype),
+                      "state": ((4, d), f32)}),
+        meta={"bs": bs, "n_sb": S // bs})

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import KernelPlanError, slstm_block_plan
+
 GATES = ("i", "f", "z", "o")
 
 
@@ -94,12 +96,13 @@ def slstm_scan(pre, R, *, block_s: int = 128, interpret: bool = False):
     (block_s, 4, d) gate tile + 4 state vectors.
     """
     B, S, four, d = pre.shape
-    assert four == 4
+    if four != 4:
+        raise KernelPlanError(
+            f"slstm_scan: pre must carry the 4 gates (i,f,z,o) on axis 2, "
+            f"got {four}")
     _, H, hd, _ = R.shape
-    assert H * hd == d
-    bs = min(block_s, S)
-    assert S % bs == 0
-    n_sb = S // bs
+    plan = slstm_block_plan(B, S, d, H, hd, block_s, pre.dtype)
+    bs, n_sb = plan.meta["bs"], plan.meta["n_sb"]
 
     kernel = functools.partial(_kernel, bs=bs, n_heads=H, hd=hd, d=d)
     out = pl.pallas_call(

@@ -184,13 +184,9 @@ class Deployment:
         """PlanReport for the current plan (memory ledger + sharing
         savings; latency/routes when a SimResult is attached)."""
         pl = self._ensure_plan()
-        memory = {}
-        for dev in self.cluster.devices:
-            used = sum(self._module_bytes(m)
-                       for m, hosts in pl.assignment.items()
-                       if dev.name in hosts)
-            memory[dev.name] = {"used": used, "capacity": dev.mem_capacity,
-                                "free": dev.mem_capacity - used}
+        memory = pl.ledger(
+            self.cluster.devices,
+            {m: self._module_bytes(m) for m in pl.assignment})
         routes: dict[int, dict[str, str]] = {}
         if sim is not None:
             for e in sim.events:
@@ -205,6 +201,41 @@ class Deployment:
             dedicated_bytes=self.registry.dedicated_bytes(),
             sharing_savings=self.registry.sharing_savings(),
             sim=sim, routes=routes, migrations=migrations or [])
+
+    # -- verification ---------------------------------------------------
+    def verify(self, *, kernels: bool = False,
+               vmem_budget: int | None = None) -> list:
+        """Static pre-flight: run the ``repro.analysis`` plan verifier
+        against the current plan (memory ledgers, mapping completeness,
+        acyclicity, reachability, refcounts, sharing legality) and —
+        with ``kernels=True`` — the Pallas kernel checker over the zoo's
+        shapes.  Returns the ``Diagnostic`` list and raises nothing;
+        ``materialize()``/``serve()`` call it and raise ``PlanError``
+        when it reports ERRORs."""
+        from repro.analysis import verify_deployment
+
+        return verify_deployment(self, kernels=kernels,
+                                 vmem_budget=vmem_budget)
+
+    def _preflight(self, stage: str) -> None:
+        """Gate a device-touching stage on the static verifier: ERROR
+        findings raise ``PlanError`` (with the full diagnostic list
+        attached), WARNINGs are logged and execution proceeds."""
+        import logging
+
+        from repro.analysis.diagnostics import PlanError, errors, warnings
+
+        diags = self.verify()
+        log = logging.getLogger("repro.s2m3")
+        for d in warnings(diags):
+            log.warning("%s pre-flight: %s", stage, d.format())
+        errs = errors(diags)
+        if errs:
+            raise PlanError(
+                f"{stage} pre-flight: plan verification failed with "
+                f"{len(errs)} error(s):\n"
+                + "\n".join(d.format() for d in errs),
+                diagnostics=diags)
 
     # -- prediction -----------------------------------------------------
     def simulate(self, workload: list[Request], *,
@@ -242,6 +273,7 @@ class Deployment:
             device_map = {d.name: devs[i % len(devs)]
                           for i, d in enumerate(self.cluster.devices)}
         self._ensure_plan()
+        self._preflight("materialize")
         self.engine = S2M3Engine(device_map, registry=self.registry,
                                  cluster=self.cluster,
                                  routing=self._routing_name)
@@ -291,6 +323,7 @@ class Deployment:
         from repro.serving.scheduler import SchedulerConfig, ServeScheduler
 
         eng = self._require_engine()
+        self._preflight("serve")
         cfg = config or SchedulerConfig(max_batch=max_batch,
                                         max_queue_depth=max_queue_depth,
                                         admission=admission)

@@ -146,6 +146,29 @@ def available_placements() -> tuple[str, ...]:
     return tuple(sorted(_PLACEMENTS))
 
 
+def strategy_options(fn: PlacementStrategy) -> tuple[str, ...] | None:
+    """Keyword options a placement strategy accepts, for static typo
+    checking of ``plan(**opts)``.  Returns ``None`` when the strategy
+    declares a real ``**kwargs`` (anything goes — not checkable); the
+    built-ins use the ``**_`` convention for "ignore options meant for
+    other strategies", which *is* checkable."""
+    import inspect
+
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    names = []
+    for p in sig.parameters.values():
+        if p.kind == inspect.Parameter.VAR_KEYWORD:
+            if p.name != "_":
+                return None
+        elif p.kind in (inspect.Parameter.KEYWORD_ONLY,
+                        inspect.Parameter.POSITIONAL_OR_KEYWORD):
+            names.append(p.name)
+    return tuple(names)
+
+
 @register_placement("greedy")
 def place_greedy(models, cluster, *, workload=None, replicate=False,
                  **_) -> Placement:

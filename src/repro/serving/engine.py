@@ -132,11 +132,15 @@ class S2M3Engine:
         hosts = self.placement.devices_for(module_name)
         mapped = [h for h in hosts if h in self.device_map]
         if hosts and not mapped:
-            raise KeyError(
+            from repro.analysis.diagnostics import PlanError
+
+            raise PlanError(
                 f"module {module_name!r} is placed on {list(hosts)} but none "
                 f"of those hosts is in device_map {sorted(self.device_map)}; "
                 "extend device_map (see Deployment._extend_device_map) or "
-                "replan onto mapped devices")
+                "replan onto mapped devices",
+                module=module_name, requested=tuple(hosts),
+                available=tuple(sorted(self.device_map)))
         return mapped
 
     def route_module(self, module_name: str, *, device_free=None,

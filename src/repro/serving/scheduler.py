@@ -58,6 +58,7 @@ emitted queue/batch-occupancy stats are directly checkable against
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -148,6 +149,12 @@ class ServeScheduler:
         self.results: dict[int, InferenceResult] = {}
         self._free_at: dict[str, float] = {}   # host -> predicted busy-until
         self._epoch = time.perf_counter()
+        # guards queues/stats/inflight/results/_free_at; RLock so a
+        # blocked submit() may re-enter through step().  Discipline
+        # (enforced by repro.analysis.concurrency_lint): mutate shared
+        # state only under the lock; never dispatch device work while
+        # holding it.
+        self._lock = threading.RLock()
         # the engine's routing now sees real queues, not empty ones
         engine.queue_probe = self.snapshot
 
@@ -156,17 +163,25 @@ class ServeScheduler:
         return time.perf_counter() - self._epoch
 
     def snapshot(self) -> QueueSnapshot:
-        return QueueSnapshot(
-            t=self._now(),
-            device_free=tuple(sorted(self._free_at.items())),
-            depths=tuple(sorted((m, len(q))
-                                for m, q in self.queues.items())))
+        with self._lock:
+            return QueueSnapshot(
+                t=self._now(),
+                device_free=tuple(sorted(self._free_at.items())),
+                depths=tuple(sorted((m, len(q))
+                                    for m, q in self.queues.items())))
 
     def queue_depths(self) -> dict[str, int]:
-        return {m: len(q) for m, q in self.queues.items() if q}
+        with self._lock:
+            return {m: len(q) for m, q in self.queues.items() if q}
 
     def stats_dict(self) -> dict[str, dict[str, Any]]:
-        return {m: st.as_dict() for m, st in sorted(self.stats.items())}
+        """Stable-schema stats: one row per deployed module (plus any
+        queue that ever formed), all counter keys present and zeroed
+        even before the first ``serve()``/``step()``."""
+        with self._lock:
+            names = set(self.stats) | set(self.engine.registry.modules)
+            return {m: self.stats.get(m, ModuleStats(m)).as_dict()
+                    for m in sorted(names)}
 
     @property
     def cross_task_batches(self) -> int:
@@ -184,7 +199,7 @@ class ServeScheduler:
         targets = ([m.name for m in model.encoders]
                    if model.encoders else [model.head.name])
         for t in targets:
-            while len(self.queues.get(t, ())) >= self.cfg.max_queue_depth:
+            while self._at_depth(t):
                 if self.cfg.admission == "reject":
                     raise QueueFull(
                         f"module queue {t!r} at max_queue_depth="
@@ -193,7 +208,8 @@ class ServeScheduler:
                     break                 # nothing serviceable: admit anyway
         fl = _InFlight(request, self._now(),
                        pending={m.name for m in model.encoders})
-        self.inflight[request.rid] = fl
+        with self._lock:
+            self.inflight[request.rid] = fl
         if model.encoders:
             for enc in model.encoders:
                 self._enqueue(_Stage(request.rid, enc.name, request,
@@ -201,18 +217,26 @@ class ServeScheduler:
         else:
             self._enqueue(_Stage(request.rid, model.head.name, request))
 
+    def _at_depth(self, module: str) -> bool:
+        with self._lock:
+            return (len(self.queues.get(module, ()))
+                    >= self.cfg.max_queue_depth)
+
     def _enqueue(self, stage: _Stage) -> None:
-        q = self.queues.setdefault(stage.module, deque())
-        q.append(stage)
-        st = self.stats.setdefault(stage.module, ModuleStats(stage.module))
-        st.max_depth = max(st.max_depth, len(q))
+        with self._lock:
+            q = self.queues.setdefault(stage.module, deque())
+            q.append(stage)
+            st = self.stats.setdefault(stage.module,
+                                       ModuleStats(stage.module))
+            st.max_depth = max(st.max_depth, len(q))
 
     # -- scheduling -----------------------------------------------------
     def step(self) -> bool:
         """Service the deepest non-empty queue (most coalescing
         opportunity); returns False when there is nothing to do."""
-        module = max((m for m, q in self.queues.items() if q),
-                     key=lambda m: len(self.queues[m]), default=None)
+        with self._lock:
+            module = max((m for m, q in self.queues.items() if q),
+                         key=lambda m: len(self.queues[m]), default=None)
         if module is None:
             return False
         self._service(module)
@@ -233,22 +257,29 @@ class ServeScheduler:
 
     # -- execution ------------------------------------------------------
     def _service(self, module: str) -> None:
-        q = self.queues[module]
-        head = q.popleft()
         spec = self.engine.registry.modules.get(module)
-        if spec is not None and spec.kind == "encoder":
-            batch, skipped = [head], []
-            sig = self._shape_sig(head.x)
-            while q and len(batch) < self.cfg.max_batch:
-                s = q.popleft()
-                if sig is not None and self._shape_sig(s.x) == sig:
-                    batch.append(s)
-                else:
-                    skipped.append(s)     # incompatible payload: stays FIFO
-            q.extendleft(reversed(skipped))
+        is_encoder = spec is not None and spec.kind == "encoder"
+        # form the batch under the lock; dispatch outside it
+        with self._lock:
+            q = self.queues.get(module)
+            if not q:
+                return
+            head = q.popleft()
+            batch = [head]
+            if is_encoder:
+                skipped = []
+                sig = self._shape_sig(head.x)
+                while q and len(batch) < self.cfg.max_batch:
+                    s = q.popleft()
+                    if sig is not None and self._shape_sig(s.x) == sig:
+                        batch.append(s)
+                    else:
+                        skipped.append(s)  # incompatible payload: stays FIFO
+                q.extendleft(reversed(skipped))
+        if is_encoder:
             self._run_encoder_batch(module, batch)
         else:
-            self._run_head(module, head)
+            self._run_head(module, batch[0])
 
     @staticmethod
     def _shape_sig(x) -> tuple | None:
@@ -279,17 +310,19 @@ class ServeScheduler:
         except KeyError:
             return
         t_est = eng.cluster.t_comp(spec, dev) * batch_factor(k)
-        self._free_at[host] = max(self._free_at.get(host, 0.0),
-                                  t_dispatch) + t_est
+        with self._lock:
+            self._free_at[host] = max(self._free_at.get(host, 0.0),
+                                      t_dispatch) + t_est
 
     def _bookkeep(self, module: str, batch: list[_Stage]) -> ModuleStats:
-        st = self.stats.setdefault(module, ModuleStats(module))
-        st.n_calls += 1
-        st.n_stages += len(batch)
-        st.batch_sizes.append(len(batch))
-        if len({s.request.model for s in batch}) >= 2:
-            st.cross_task_batches += 1
-        return st
+        with self._lock:
+            st = self.stats.setdefault(module, ModuleStats(module))
+            st.n_calls += 1
+            st.n_stages += len(batch)
+            st.batch_sizes.append(len(batch))
+            if len({s.request.model for s in batch}) >= 2:
+                st.cross_task_batches += 1
+            return st
 
     def _run_encoder_batch(self, module: str, batch: list[_Stage]) -> None:
         host = self._route(module, batch[0])
@@ -321,7 +354,8 @@ class ServeScheduler:
                 self._enqueue(_Stage(s.rid, head_name, s.request))
 
     def _run_head(self, module: str, stage: _Stage) -> None:
-        fl = self.inflight.pop(stage.rid)
+        with self._lock:
+            fl = self.inflight.pop(stage.rid)
         host = self._route(module, stage)
         t0 = self._now()
         out, used = self.engine.apply_head(
@@ -335,7 +369,9 @@ class ServeScheduler:
         fl.timeline.append((module, "head", t0, t1))
         fl.enc_outputs = {k: jax.block_until_ready(v)
                           for k, v in fl.enc_outputs.items()}
-        self.results[stage.rid] = InferenceResult(
+        result = InferenceResult(
             model=stage.request.model, output=out,
             encoder_outputs=fl.enc_outputs, timeline=fl.timeline,
             latency_s=t1 - fl.t_admit, devices=fl.devices, rid=stage.rid)
+        with self._lock:
+            self.results[stage.rid] = result

@@ -1,0 +1,380 @@
+"""repro.analysis: static plan verifier, Pallas kernel checker,
+concurrency lint, and the Deployment.verify() pre-flight."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    PlanError, Severity, errors, format_report, verify_deployment,
+)
+from repro.analysis.concurrency_lint import lint_serving, lint_source
+from repro.analysis.kernel_check import (
+    ENTRY_POINTS, check_case, check_kernels, zoo_cases,
+)
+from repro.analysis.plan_check import check_plan
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.module import ModelSpec, ModuleSpec
+from repro.core.placement import Placement
+from repro.s2m3 import Deployment
+
+MB = 1024**2
+GB = 1024**3
+
+
+def _codes(diags):
+    return {d.code for d in diags}
+
+
+def _cluster(n=3, cap=1 * GB, links=None):
+    return ClusterSpec(
+        devices=[DeviceSpec(f"d{i}", cap, 1e9) for i in range(n)],
+        links=links or {})
+
+
+def _specs():
+    vis = ModuleSpec("vis-enc", "encoder", "vision", 60_000,
+                     flops_per_query=2e6)
+    txt = ModuleSpec("txt-enc", "encoder", "text", 50_000,
+                     flops_per_query=1e6)
+    cos = ModuleSpec("cos-head", "head", "task", 1_000)
+    cls = ModuleSpec("cls-head", "head", "task", 1_000)
+    retrieval = ModelSpec("retrieval", "retrieval", (vis, txt), cos)
+    classify = ModelSpec("classify", "classification", (vis,), cls)
+    return vis, txt, cos, cls, retrieval, classify
+
+
+def _builders():
+    return {
+        "vis-enc": lambda: (lambda p, x: x * p, jnp.float32(2.0)),
+        "txt-enc": lambda: (lambda p, x: x + p, jnp.float32(1.0)),
+        "cos-head": lambda: (
+            lambda p, enc: enc["vision"] + enc["text"] + p, jnp.float32(0.0)),
+        "cls-head": lambda: (lambda p, enc: enc["vision"] * p,
+                             jnp.float32(3.0)),
+    }
+
+
+def _dep(materialize=False):
+    *_, retrieval, classify = _specs()
+    dep = (Deployment(_cluster())
+           .add_model(retrieval, _builders())
+           .add_model(classify)
+           .plan("greedy", routing="paper"))
+    if materialize:
+        dep.materialize()
+    return dep
+
+
+# ---- plan verifier ------------------------------------------------------
+
+def test_clean_plan_verifies_clean():
+    dep = _dep()
+    diags = dep.verify()
+    assert errors(diags) == [], format_report(diags)
+
+
+def test_memory_overflow_rejected_statically():
+    """Acceptance (a): a plan whose device ledger exceeds capacity is
+    rejected by name, not by a mid-serve OOM."""
+    dep = _dep()
+    dep.placement.module_bytes["vis-enc"] = 100 * GB   # ledger drift
+    diags = dep.verify()
+    assert "plan/memory-overflow" in _codes(errors(diags))
+    with pytest.raises(PlanError, match="plan/memory-overflow"):
+        dep.materialize()
+
+
+def test_unmapped_module_rejected_statically():
+    """Acceptance (b): a module the plan never assigned is a named
+    diagnostic at verify time — not a runtime KeyError."""
+    dep = _dep()
+    del dep.placement.assignment["txt-enc"]
+    diags = dep.verify()
+    errs = errors(diags)
+    assert "plan/unmapped-module" in _codes(errs)
+    assert any(d.entity == "txt-enc" for d in errs)
+    with pytest.raises(PlanError, match="unmapped-module"):
+        dep.materialize()
+
+
+def test_sharing_collision_rejected_statically():
+    """Acceptance (c): one signature shared across tasks with
+    incompatible specs is a sharing-legality error."""
+    enc_a = ModuleSpec("shared-enc", "encoder", "vision", 10_000,
+                       output_bytes=512)
+    enc_b = ModuleSpec("shared-enc", "encoder", "vision", 99_000,
+                       output_bytes=2048)
+    m1 = ModelSpec("vqa", "vqa", (enc_a,),
+                   ModuleSpec("h1", "head", "task", 10))
+    m2 = ModelSpec("cap", "captioning", (enc_b,),
+                   ModuleSpec("h2", "head", "task", 10))
+    pl = Placement(assignment={"shared-enc": ["d0"], "h1": ["d0"],
+                               "h2": ["d1"]})
+    diags = check_plan(pl, _cluster(), [m1, m2])
+    hits = [d for d in errors(diags) if d.code == "plan/signature-collision"]
+    assert hits and hits[0].entity == "shared-enc"
+    assert "n_params" in hits[0].message
+
+    # the same check through verify(): model drift injected behind the
+    # registry's admission-time guard
+    dep = Deployment(_cluster()).add_model(m1)
+    dep.plan("greedy")
+    dep.registry._models["cap"] = m2
+    assert "plan/signature-collision" in _codes(errors(dep.verify()))
+
+
+def test_dependency_cycle_detected():
+    a = ModuleSpec("mod-a", "encoder", "vision", 10)
+    b_head = ModuleSpec("mod-b", "head", "task", 10)
+    b_enc = ModuleSpec("mod-b", "encoder", "vision", 10)
+    a_head = ModuleSpec("mod-a", "head", "task", 10)
+    m1 = ModelSpec("m1", "t1", (a,), b_head)       # a -> b
+    m2 = ModelSpec("m2", "t2", (b_enc,), a_head)   # b -> a
+    pl = Placement(assignment={"mod-a": ["d0"], "mod-b": ["d1"]})
+    diags = check_plan(pl, _cluster(), [m1, m2])
+    assert "plan/dependency-cycle" in _codes(errors(diags))
+
+
+def test_unreachable_route_detected():
+    vis, txt, cos, _, retrieval, _ = _specs()
+    links = {("d0", "d1"): (0.0, 0.0)}            # explicit partition
+    pl = Placement(assignment={"vis-enc": ["d0"], "txt-enc": ["d1"],
+                               "cos-head": ["d1"]})
+    diags = check_plan(pl, _cluster(2, links=links), [retrieval])
+    hits = [d for d in errors(diags) if d.code == "plan/unreachable-route"]
+    assert hits and hits[0].entity == "d0"        # vis-enc cannot reach d1
+
+
+def test_unknown_device_and_duplicate_replica():
+    vis, txt, cos, _, retrieval, _ = _specs()
+    pl = Placement(assignment={"vis-enc": ["ghost"], "txt-enc": ["d0", "d0"],
+                               "cos-head": ["d1"]})
+    diags = check_plan(pl, _cluster(2), [retrieval])
+    assert "plan/unknown-device" in _codes(errors(diags))
+    assert "plan/duplicate-replica" in _codes(diags)
+
+
+def test_infeasible_plan_reported():
+    *_, retrieval, _classify = _specs()
+    dep = Deployment(_cluster(1, cap=1))          # 1-byte device
+    dep.add_model(retrieval).plan("greedy")
+    assert "plan/infeasible" in _codes(errors(dep.verify()))
+
+
+def test_unknown_plan_option_warned():
+    dep = _dep()
+    dep._plan_opts = {"replicte": True}           # typo'd 'replicate'
+    diags = dep.verify()
+    hits = [d for d in diags if d.code == "plan/unknown-option"]
+    assert hits and hits[0].severity == Severity.WARNING
+    assert hits[0].entity == "replicte"
+
+
+def test_evict_keeps_refcounts_consistent():
+    """After evicting one task, verify() stays clean and shared-module
+    refcounts match the surviving placement."""
+    dep = _dep(materialize=True)
+    freed = dep.evict("classify")
+    assert "cls-head" in freed and "vis-enc" not in freed
+    diags = dep.verify()
+    assert errors(diags) == [], format_report(diags)
+    assert dep.registry.refcount("vis-enc") == 1
+    assert "vis-enc" in dep.placement.assignment
+    assert "cls-head" not in dep.placement.assignment
+
+
+def test_stale_assignment_warned():
+    dep = _dep()
+    dep.registry.remove_model("classify")         # bypass Deployment.evict
+    diags = dep.verify()
+    assert "plan/stale-assignment" in _codes(diags)
+
+
+# ---- PlanError (satellite: structured engine error) ---------------------
+
+def test_plan_error_is_structured_keyerror():
+    err = PlanError("module 'x' unmapped", module="x",
+                    requested=("a",), available=("b", "c"))
+    assert isinstance(err, KeyError)
+    assert err.module == "x" and err.available == ("b", "c")
+    assert str(err) == "module 'x' unmapped"
+
+
+def test_engine_module_hosts_raises_plan_error():
+    dep = _dep(materialize=True)
+    dep.placement.assignment["vis-enc"] = ["ghost-dev"]
+    dep.engine.placement = dep.placement
+    with pytest.raises(PlanError, match="ghost-dev") as ei:
+        dep.engine.module_hosts("vis-enc")
+    assert ei.value.module == "vis-enc"
+    assert ei.value.requested == ("ghost-dev",)
+    assert "d0" in ei.value.available
+
+
+# ---- scheduler stats schema (satellite) ---------------------------------
+
+def test_stats_dict_stable_schema_before_serving():
+    from repro.serving.scheduler import ModuleStats, ServeScheduler
+
+    dep = _dep(materialize=True)
+    sched = ServeScheduler(dep.engine)
+    sd = sched.stats_dict()
+    expected_keys = set(ModuleStats("x").as_dict())
+    assert set(sd) == set(dep.registry.modules)    # every deployed module
+    for name, row in sd.items():
+        assert set(row) == expected_keys
+        assert row["calls"] == 0 and row["stages"] == 0
+        assert row["module"] == name
+
+
+# ---- kernel checker -----------------------------------------------------
+
+def test_zoo_kernel_sweep_is_error_free():
+    cases = zoo_cases()
+    assert {c.entry for c in cases} == set(ENTRY_POINTS)
+    diags = check_kernels()
+    assert errors(diags) == [], format_report(diags)
+    # xlstm's resident R + gate tile genuinely exceeds 16 MiB: the sweep
+    # must say so (as a warning, since it still executes)
+    assert any(d.code == "kernel/vmem-budget" for d in diags)
+
+
+def test_block_divisibility_rejected():
+    from repro.kernels.plan import KernelPlanError, flash_block_plan
+
+    with pytest.raises(KernelPlanError, match="block_q"):
+        flash_block_plan(1, 300, 8, 64, 300, 8, 256, 256, "bfloat16")
+    with pytest.raises(KernelPlanError, match="multiple of kv heads"):
+        flash_block_plan(1, 256, 6, 64, 256, 4, 256, 256, "bfloat16")
+
+
+def test_kernel_wrapper_raises_plan_error_at_trace_time():
+    import functools
+
+    import jax
+
+    from repro.kernels import ops
+    from repro.kernels.plan import KernelPlanError
+
+    q = jax.ShapeDtypeStruct((1, 300, 8, 64), "float32")
+    kv = jax.ShapeDtypeStruct((1, 300, 8, 64), "float32")
+    with pytest.raises(KernelPlanError, match="block_q"):
+        jax.eval_shape(functools.partial(ops.flash_attention,
+                                         block_q=256, block_k=256),
+                       q, kv, kv)
+
+
+def test_check_case_flags_bad_geometry_and_drift():
+    import jax
+
+    from repro.analysis.kernel_check import KernelCase, _flash_case
+
+    bad = _flash_case("bad/indivisible", B=1, S=300, H=8, D=64, T=300, K=8)
+    diags = check_case(bad)
+    assert _codes(errors(diags)) == {"kernel/block-divisibility"}
+
+    drifted = KernelCase(
+        "drift/flash", "flash_attention",
+        (jax.ShapeDtypeStruct((1, 256, 8, 64), "bfloat16"),
+         jax.ShapeDtypeStruct((1, 256, 8, 64), "bfloat16"),
+         jax.ShapeDtypeStruct((1, 256, 8, 64), "bfloat16")),
+        expected_fn=lambda: jax.ShapeDtypeStruct((1, 256, 8, 128),
+                                                 "bfloat16"))
+    diags = check_case(drifted)
+    assert "kernel/shape-drift" in _codes(errors(diags))
+
+
+def test_vmem_budget_configurable():
+    diags = check_kernels(vmem_budget=1024)       # 1 KiB: everything over
+    warned = {d.entity for d in diags if d.code == "kernel/vmem-budget"}
+    assert len(warned) == len(zoo_cases())
+
+
+# ---- concurrency lint ---------------------------------------------------
+
+_LOCKED_CLASS = '''
+import threading, jax
+class Sched:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.queue = []
+    def good(self):
+        with self._lock:
+            self.queue.append(1)
+    def {body}
+'''
+
+
+def test_lint_unlocked_mutation():
+    src = _LOCKED_CLASS.format(body="bad(self):\n        self.queue.append(2)")
+    diags = lint_source(src, "sched.py")
+    hits = [d for d in diags if d.code == "concurrency/unlocked-mutation"]
+    assert len(hits) == 1 and hits[0].severity == Severity.ERROR
+    assert "sched.py:" in hits[0].entity
+
+
+def test_lint_dispatch_under_lock():
+    src = _LOCKED_CLASS.format(
+        body="bad(self, x):\n        with self._lock:\n"
+             "            return jax.block_until_ready(x)")
+    diags = lint_source(src, "sched.py")
+    assert any(d.code == "concurrency/dispatch-under-lock"
+               and d.severity == Severity.WARNING for d in diags)
+
+
+def test_lint_registry_mutation_in_batch_path():
+    src = '''
+class Sched:
+    def step(self):
+        self._service("m")
+    def _service(self, m):
+        self._grow(m)
+    def _grow(self, m):
+        self.engine.registry.add_model(m)
+'''
+    diags = lint_source(src, "sched.py")
+    hits = [d for d in diags
+            if d.code == "concurrency/registry-mutation-in-batch-path"]
+    assert len(hits) == 1 and "add_model" in hits[0].message
+
+
+def test_lint_ignores_unguarded_only_attrs():
+    # attrs never mutated under a lock are not flagged (no discipline
+    # was declared for them)
+    src = _LOCKED_CLASS.format(body="ok(self):\n        self.other = 1")
+    assert not [d for d in lint_source(src, "s.py")
+                if d.code == "concurrency/unlocked-mutation"]
+
+
+def test_serving_layer_lints_clean():
+    diags = lint_serving()
+    assert errors(diags) == [], format_report(diags)
+
+
+# ---- CLI ----------------------------------------------------------------
+
+@pytest.mark.analysis
+def test_cli_self_mode_exits_clean(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--self"]) == 0
+    out = capsys.readouterr().out
+    assert "error(s)" in out
+
+
+def test_cli_fails_on_error_findings(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(_LOCKED_CLASS.format(
+        body="bad(self):\n        self.queue.append(2)"))
+    from repro.analysis.__main__ import main
+
+    assert main([str(bad), "--kernels"]) == 1
+
+
+# ---- verify_deployment convenience --------------------------------------
+
+def test_verify_deployment_with_kernels():
+    dep = _dep()
+    diags = verify_deployment(dep, kernels=True)
+    assert errors(diags) == [], format_report(diags)
+    assert any(d.code == "kernel/summary" for d in diags)

@@ -1,0 +1,87 @@
+"""benchmarks/diff.py — snapshot regression comparator."""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+_DIFF = Path(__file__).resolve().parents[1] / "benchmarks" / "diff.py"
+_spec = importlib.util.spec_from_file_location("bench_diff", _DIFF)
+bench_diff = importlib.util.module_from_spec(_spec)
+sys.modules["bench_diff"] = bench_diff
+_spec.loader.exec_module(bench_diff)
+
+
+def _snap(rows, section="serving"):
+    return {"section": section, "rows": rows}
+
+
+def test_no_regression_within_threshold():
+    old = _snap([{"name": "submit", "p50_ms": 10.0, "p99_ms": 20.0}])
+    new = _snap([{"name": "submit", "p50_ms": 11.0, "p99_ms": 22.0}])
+    regs, notes = bench_diff.diff_snapshots(old, new)   # +10% < 1.20x
+    assert regs == [] and notes == []
+
+
+def test_regression_beyond_threshold_flagged():
+    old = _snap([{"name": "submit", "p50_ms": 10.0, "p99_ms": 20.0}])
+    new = _snap([{"name": "submit", "p50_ms": 10.5, "p99_ms": 50.0}])
+    regs, _ = bench_diff.diff_snapshots(old, new)
+    assert [(r.row, r.metric) for r in regs] == [("submit", "p99_ms")]
+    assert regs[0].ratio == 2.5
+    assert "REGRESSION" in regs[0].format()
+
+
+def test_threshold_configurable():
+    old = _snap([{"name": "a", "wall_s": 1.0}])
+    new = _snap([{"name": "a", "wall_s": 1.15}])
+    assert bench_diff.diff_snapshots(old, new)[0] == []
+    regs, _ = bench_diff.diff_snapshots(old, new, threshold=1.10)
+    assert len(regs) == 1
+
+
+def test_improvements_and_row_churn_are_notes_not_failures():
+    old = _snap([{"name": "a", "p50_ms": 10.0},
+                 {"name": "gone", "p50_ms": 1.0}])
+    new = _snap([{"name": "a", "p50_ms": 2.0},
+                 {"name": "fresh", "p50_ms": 1.0}])
+    regs, notes = bench_diff.diff_snapshots(old, new)
+    assert regs == []
+    assert any("improvement a.p50_ms" in n for n in notes)
+    assert any("'gone' removed" in n for n in notes)
+    assert any("'fresh' added" in n for n in notes)
+
+
+def test_metric_coverage_change_is_noted():
+    old = _snap([{"name": "a", "p50_ms": 10.0, "p99_ms": 20.0}])
+    new = _snap([{"name": "a", "p50_ms": 10.0}])
+    _, notes = bench_diff.diff_snapshots(old, new)
+    assert any("a.p99_ms present in only one snapshot" in n for n in notes)
+
+
+def test_non_latency_keys_ignored():
+    old = _snap([{"name": "a", "p50_ms": 10.0, "throughput_rps": 100.0}])
+    new = _snap([{"name": "a", "p50_ms": 10.0, "throughput_rps": 1.0}])
+    regs, notes = bench_diff.diff_snapshots(old, new)
+    assert regs == [] and notes == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_snap([{"name": "a", "p50_ms": 10.0}])))
+    new.write_text(json.dumps(_snap([{"name": "a", "p50_ms": 100.0}])))
+    assert bench_diff.main([str(old), str(new)]) == 1
+    assert "REGRESSION a.p50_ms" in capsys.readouterr().out
+    assert bench_diff.main([str(old), str(old)]) == 0
+
+
+def test_real_snapshot_self_diff_is_clean():
+    snap = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+    if not snap.exists():
+        import pytest
+
+        pytest.skip("no committed serving snapshot")
+    data = json.loads(snap.read_text())
+    regs, notes = bench_diff.diff_snapshots(data, data)
+    assert regs == [] and notes == []
