@@ -1,0 +1,110 @@
+"""Kernel microbenchmark section: us/call for every Pallas entry point
+in interpret mode (this box is CPU-only; TPU is the compile target), at
+CPU-sized shapes.
+
+Interpret-mode timings track Python-level kernel-body cost, not Mosaic
+performance — their value here is as a *regression tripwire*: a kernel
+edit that doubles the interpret-mode time almost certainly grew the real
+working set too.  Rows feed ``benchmarks/run.py``, which snapshots them
+to ``BENCH_kernels.json`` for ``python -m repro.analysis --self`` to
+diff against.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *, iters: int = 3) -> float:
+    """Median wall-clock seconds per call (after one warmup)."""
+    jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _cases():
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # flash_attention: (B, S, H, D) prefill-style
+    B, S, H, D = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    yield ("flash_attention", {"B": B, "S": S, "H": H, "D": D},
+           lambda: ops.flash_attention(q, k, v, causal=True,
+                                       block_q=128, block_k=128,
+                                       interpret=True))
+
+    # decode_attention: single query over a contiguous cache
+    T = 512
+    dq = jax.random.normal(ks[3], (B, H, D), jnp.float32)
+    dk = jax.random.normal(ks[4], (B, T, H, D), jnp.float32)
+    dv = jax.random.normal(ks[5], (B, T, H, D), jnp.float32)
+    dlen = jnp.array([T, T // 2], jnp.int32)
+    yield ("decode_attention", {"B": B, "T": T, "H": H, "D": D},
+           lambda: ops.decode_attention(dq, dk, dv, dlen, block_k=256,
+                                        interpret=True))
+
+    # paged_decode_attention: same workload through the page pool
+    page_size = 16
+    n_max = -(-T // page_size)
+    n_pages = B * n_max + 1
+    perm = np.random.default_rng(0).permutation(n_pages - 1) + 1
+    tables = np.asarray(perm[:B * n_max].reshape(B, n_max), np.int32)
+    kp = np.zeros((n_pages, page_size, H, D), np.float32)
+    vp = np.zeros((n_pages, page_size, H, D), np.float32)
+    for b in range(B):
+        for j in range(n_max):
+            sl = np.asarray(dk[b, j * page_size:(j + 1) * page_size])
+            kp[tables[b, j], :sl.shape[0]] = sl
+            vp[tables[b, j], :sl.shape[0]] = np.asarray(
+                dv[b, j * page_size:(j + 1) * page_size])
+    kp, vp = jnp.asarray(kp), jnp.asarray(vp)
+    jtables = jnp.asarray(tables)
+    yield ("paged_decode_attention",
+           {"B": B, "T": T, "H": H, "D": D, "page_size": page_size},
+           lambda: ops.paged_decode_attention(dq, kp, vp, jtables, dlen,
+                                              interpret=True))
+
+    # ssd_chunked: Mamba2 SSD scan
+    Bs, Ss, Hs, P, N = 1, 256, 2, 32, 16
+    x = jax.random.normal(ks[6], (Bs, Ss, Hs, P), jnp.float32)
+    Bm = jax.random.normal(ks[7], (Bs, Ss, N), jnp.float32) * 0.1
+    Cm = jax.random.normal(ks[0], (Bs, Ss, N), jnp.float32) * 0.1
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, Ss, Hs)))
+    A_log = jnp.zeros((Hs,))
+    yield ("ssd_chunked", {"B": Bs, "S": Ss, "H": Hs, "P": P, "N": N},
+           lambda: ops.ssd_chunked(x, Bm, Cm, dt, A_log, chunk=64,
+                                   interpret=True))
+
+    # slstm_scan: recurrent sLSTM cell sweep
+    Bg, Sg, Hh, hd = 2, 128, 4, 16
+    pre = jax.random.normal(ks[2], (Bg, Sg, 4, Hh * hd), jnp.float32) * 0.5
+    R = jax.random.normal(ks[3], (4, Hh, hd, hd), jnp.float32) * 0.2
+    yield ("slstm_scan", {"B": Bg, "S": Sg, "H": Hh, "hd": hd},
+           lambda: ops.slstm_scan(pre, R, block_s=64, interpret=True))
+
+
+def run():
+    rows = []
+    for name, dims, fn in _cases():
+        sec = _time(fn)
+        rows.append({"name": name, "us_per_call": round(sec * 1e6, 1),
+                     "interpret": True, **dims})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -21,8 +21,9 @@ def _time(fn, *args, iters=5):
 
 def run():
     from repro.common.config import get_config
+    from repro.core.routing import Request
     from repro.models.api import build_model
-    from repro.serving.generator import GenRequest, LMServer
+    from repro.serving.scheduler import SchedulerConfig, lm_scheduler
 
     rows = []
     cfg = get_config("tinyllama-1.1b", smoke=True)
@@ -48,12 +49,13 @@ def run():
     rows.append({"name": "decode_step_tinyllama_smoke",
                  "us_per_call": round(_time(dec, params, toks, cache, lens), 1)})
 
-    # serving throughput
-    server = LMServer(bundle, max_batch=4, cache_len=64, params=params)
-    for i in range(8):
-        server.submit(GenRequest(rid=i, prompt=[1, 2, 3], max_new_tokens=8))
+    # serving throughput through the paged decode substrate
+    sched = lm_scheduler(bundle, params, config=SchedulerConfig(
+        decode_rows=4, page_size=8, max_seq_len=64, decode_pages=33))
+    reqs = [Request(rid=i, model="lm", source="dev0", prompt=(1, 2, 3),
+                    max_new_tokens=8) for i in range(8)]
     t0 = time.perf_counter()
-    done = server.run()
+    done = sched.serve(reqs)
     dt = time.perf_counter() - t0
     toks_out = sum(len(r.output) for r in done)
     rows.append({"name": "server_tokens_per_s",

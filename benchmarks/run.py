@@ -33,7 +33,9 @@ def _snapshot(section: str, rows, error: str | None = None) -> None:
 
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import microbench, optimality, roofline, serving, tables
+    from benchmarks import (
+        kernels, microbench, optimality, roofline, serving, tables,
+    )
 
     sections = {
         "table_vi": tables.table_vi,
@@ -47,6 +49,7 @@ def main() -> None:
         "roofline_summary": roofline.summary,
         "microbench": microbench.run,
         "serving": serving.run,
+        "kernels": kernels.run,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():

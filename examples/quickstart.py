@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import TrainConfig, get_config
+from repro.core.routing import Request
 from repro.models.api import build_model
-from repro.serving.generator import GenRequest, LMServer
+from repro.serving.scheduler import lm_scheduler
 from repro.training.data import DataConfig, TokenStream
 from repro.training.optimizer import init_state
 from repro.training.train_step import make_train_step
@@ -59,14 +60,16 @@ def main():
             print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
                   f"lr {float(metrics['lr']):.2e}")
 
-    print("\nserving with continuous batching:")
-    server = LMServer(bundle, max_batch=4, cache_len=128,
-                      params=state["params"])
-    for i in range(6):
-        server.submit(GenRequest(rid=i, prompt=[1 + i, 2, 3],
-                                 max_new_tokens=12))
-    for req in server.run():
-        print(f"  req {req.rid}: prompt={req.prompt} -> {req.output}")
+    print("\nserving with continuous batching (paged KV decode):")
+    sched = lm_scheduler(bundle, state["params"])
+    reqs = [Request(rid=i, model="lm", source="dev0",
+                    prompt=(1 + i, 2, 3), max_new_tokens=12)
+            for i in range(6)]
+    for r in sched.serve(reqs):
+        print(f"  req {r.rid}: -> {list(r.output)}")
+    st = sched.stats_dict()[cfg.name]
+    print(f"  {st['decode_tokens']} tokens in {st['decode_steps']} batched "
+          f"decode steps, peak pages {st['pages_peak']}")
 
 
 if __name__ == "__main__":

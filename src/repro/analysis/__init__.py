@@ -48,16 +48,25 @@ __all__ = [
 
 
 def verify_deployment(dep, *, kernels: bool = False,
-                      vmem_budget: int | None = None) -> list[Diagnostic]:
+                      vmem_budget: int | None = None,
+                      decode_pages: int | None = None,
+                      page_size: int | None = None) -> list[Diagnostic]:
     """Run the static plan verifier (and optionally the kernel checker)
-    against a ``s2m3.Deployment``.  Pure inspection: raises nothing,
+    against a ``s2m3.Deployment``.  When ``decode_pages``/``page_size``
+    are given (the serve() pre-flight passes the scheduler's actual
+    knobs), generative heads' paged-KV pools are checked against the
+    per-device memory ledgers too.  Pure inspection: raises nothing,
     returns the finding list for the caller's policy."""
-    from repro.analysis.plan_check import check_plan
+    from repro.analysis.plan_check import check_page_budget, check_plan
 
     placement = dep._ensure_plan()
     diags = check_plan(
         placement, dep.cluster, dep.models, registry=dep.registry,
         placement_name=dep._placement_name, plan_opts=dep._plan_opts)
+    if decode_pages is not None and page_size is not None:
+        diags = diags + check_page_budget(
+            placement, dep.cluster, dep.models,
+            decode_pages=decode_pages, page_size=page_size)
     if kernels:
         from repro.analysis.kernel_check import check_kernels
 

@@ -2,11 +2,20 @@
 
     python -m repro.analysis --self              # CI mode: lint the repro
                                                  # package + kernel sweep
+                                                 # + bench regression gate
     python -m repro.analysis src/repro/serving   # lint specific paths
     python -m repro.analysis --kernels           # kernel checker only
 
-Exit status 1 when any ERROR-severity finding is emitted (WARNING/INFO
-never fail the run).
+``--self`` additionally re-runs the kernel and serving benchmark
+sections and diffs them against the committed ``BENCH_kernels.json`` /
+``BENCH_serving.json`` snapshots (``benchmarks/diff.py``); a latency
+metric regressing beyond ``--bench-threshold`` fails the run just like
+an ERROR finding.  Missing snapshots or a missing ``benchmarks/``
+package skip the gate with a note (installed-package layouts have no
+bench tree).
+
+Exit status 1 when any ERROR-severity finding is emitted or the bench
+gate regresses (WARNING/INFO never fail the run).
 """
 
 from __future__ import annotations
@@ -16,6 +25,49 @@ import sys
 from pathlib import Path
 
 from repro.analysis.diagnostics import errors, format_report
+
+
+def _bench_regressions(threshold: float):
+    """Fresh-run the kernel + serving bench sections and diff them
+    against the committed repo-root snapshots.  Returns
+    ``(lines, failed)`` — human-readable report lines and whether any
+    section regressed (or crashed)."""
+    import json
+
+    root = Path(__file__).resolve().parents[3]
+    if not (root / "benchmarks").is_dir():
+        return ["bench gate: no benchmarks/ package found, skipped"], False
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    from benchmarks import kernels, serving
+    from benchmarks.diff import diff_snapshots
+
+    lines, failed = [], False
+    for name, fn in (("kernels", kernels.run), ("serving", serving.run)):
+        snap = root / f"BENCH_{name}.json"
+        if not snap.exists():
+            lines.append(f"bench gate [{name}]: {snap.name} missing, "
+                         "section skipped (run benchmarks/run.py)")
+            continue
+        try:
+            new_rows = fn()
+        except Exception as e:      # a crashed bench run is a failure
+            lines.append(f"bench gate [{name}]: run crashed: "
+                         f"{type(e).__name__}: {e}")
+            failed = True
+            continue
+        regs, notes = diff_snapshots(
+            json.loads(snap.read_text()),
+            {"section": name, "rows": list(new_rows)},
+            threshold=threshold)
+        lines += [f"bench gate [{name}]: {r.format()}" for r in regs]
+        lines += [f"bench gate [{name}]: {n}" for n in notes]
+        if regs:
+            failed = True
+        else:
+            lines.append(f"bench gate [{name}]: ok "
+                         f"(threshold {threshold:g}x)")
+    return lines, failed
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -35,6 +87,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
                     help="per-core VMEM budget for kernel working sets "
                          "(default 16 MiB)")
+    ap.add_argument("--no-bench", action="store_true",
+                    help="skip the benchmark regression gate in --self "
+                         "mode")
+    ap.add_argument("--bench-threshold", type=float, default=2.0,
+                    metavar="RATIO",
+                    help="fail when a bench latency metric exceeds "
+                         "baseline * RATIO (default 2.0 — interpret-mode "
+                         "wall clocks are noisy, this is a blowup "
+                         "tripwire, not a perf SLO)")
     args = ap.parse_args(argv)
 
     run_kernels = args.kernels or args.self_mode or not args.paths
@@ -62,7 +123,13 @@ def main(argv: list[str] | None = None) -> int:
         diags += check_kernels(vmem_budget=args.vmem_budget)
 
     print(format_report(diags))
-    return 1 if errors(diags) else 0
+
+    bench_failed = False
+    if args.self_mode and not args.no_bench:
+        lines, bench_failed = _bench_regressions(args.bench_threshold)
+        for line in lines:
+            print(line)
+    return 1 if errors(diags) or bench_failed else 0
 
 
 if __name__ == "__main__":

@@ -17,7 +17,12 @@ draining consumer may touch from different threads.  The discipline is:
   (``add_model`` / ``remove_model`` / ``deploy_model`` /
   ``evict_model``): registry churn mid-batch invalidates the specs the
   batch was formed against — ``concurrency/registry-mutation-in-batch-path``
-  ERROR.
+  ERROR;
+* allocator mutations (``alloc`` / ``extend`` / ``free`` / ``release``
+  on any self-rooted object — the page pool and row slots of a decode
+  stream) must run under the lock: a free racing an alloc corrupts the
+  free list and double-assigns pages —
+  ``concurrency/unlocked-allocator-call`` ERROR.
 
 Scope and honesty: this is a lint, not an escape analysis.  It tracks
 direct ``self.X`` mutations (assignment, augmented assignment, ``del``,
@@ -41,7 +46,9 @@ _MUTATORS = {"append", "appendleft", "extend", "extendleft", "insert",
              "pop", "popleft", "popitem", "remove", "discard", "clear",
              "update", "setdefault", "add"}
 _DISPATCH_ATTRS = {"device_put", "block_until_ready", "apply_module",
-                   "apply_head", "infer", "apply"}
+                   "apply_head", "infer", "apply", "apply_prefill",
+                   "apply_paged_decode", "init_paged_cache", "generate"}
+_ALLOC_MUTATORS = {"alloc", "extend", "free", "release"}
 _DISPATCH_ROOTS = {"jax", "jnp"}
 _REGISTRY_MUTATORS = {"add_model", "remove_model", "deploy_model",
                       "evict_model"}
@@ -62,6 +69,14 @@ def _root_name(node) -> str | None:
     return node.id if isinstance(node, ast.Name) else None
 
 
+def _self_rooted(node) -> bool:
+    """True when an attribute chain bottoms out at ``self``, looking
+    through subscripts too (``self.decode[m].pool``)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
 def _is_lock_with(item: ast.withitem, lock_attrs: set[str]) -> bool:
     attr = _self_attr(item.context_expr)
     return attr is not None and (attr in lock_attrs
@@ -75,6 +90,8 @@ class _ClassFacts:
         self.mutations: list[tuple[str, str, int, bool]] = []
         # (call description, method, lineno)
         self.locked_dispatch: list[tuple[str, str, int]] = []
+        # (call description, method, lineno, under_lock)
+        self.alloc_calls: list[tuple[str, str, int, bool]] = []
         self.self_calls: dict[str, set[str]] = {}
         self.registry_calls: dict[str, list[tuple[str, int]]] = {}
         self.methods: set[str] = set()
@@ -128,6 +145,21 @@ def _call_mutations_in_expr(node) -> list[tuple[str, int]]:
     return out
 
 
+def _allocator_calls(node) -> list[tuple[str, int]]:
+    """Self-rooted allocator-mutator calls (``self.pool.alloc(...)``,
+    ``self.rows.release(...)``) — the decode substrate's free lists."""
+    out = []
+    for call in ast.walk(node):
+        if not isinstance(call, ast.Call):
+            continue
+        fn = call.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _ALLOC_MUTATORS
+                and isinstance(fn.value, (ast.Attribute, ast.Subscript))
+                and _self_rooted(fn.value)):
+            out.append((ast.unparse(fn), call.lineno))
+    return out
+
+
 def _dispatch_calls(node) -> list[tuple[str, int]]:
     out = []
     for call in ast.walk(node):
@@ -154,6 +186,8 @@ def _collect_method(facts: _ClassFacts, method: ast.FunctionDef) -> None:
         statement bodies (those are recursed with their own lock ctx)."""
         for attr, ln in _call_mutations_in_expr(node):
             facts.mutations.append((attr, name, ln, under_lock))
+        for desc, ln in _allocator_calls(node):
+            facts.alloc_calls.append((desc, name, ln, under_lock))
         if under_lock:
             for desc, ln in _dispatch_calls(node):
                 facts.locked_dispatch.append((desc, name, ln))
@@ -246,6 +280,16 @@ def _lint_class(cls: ast.ClassDef, filename: str) -> list[Diagnostic]:
                 f"{sorted(facts.lock_attrs)}", entity=loc(ln),
                 hint=f"wrap the mutation in `with self."
                      f"{sorted(facts.lock_attrs)[0]}:`"))
+        for desc, meth, ln, locked in facts.alloc_calls:
+            if locked or meth == "__init__":
+                continue
+            diags.append(Diagnostic(
+                Severity.ERROR, "concurrency/unlocked-allocator-call",
+                f"{cls.name}.{meth} calls {desc}(...) outside the lock; "
+                "allocator free lists race against concurrent "
+                "alloc/free and double-assign pages", entity=loc(ln),
+                hint=f"hold `with self.{sorted(facts.lock_attrs)[0]}:` "
+                     "across the allocator call"))
         for desc, meth, ln in facts.locked_dispatch:
             diags.append(Diagnostic(
                 Severity.WARNING, "concurrency/dispatch-under-lock",

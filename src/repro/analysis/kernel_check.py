@@ -28,8 +28,9 @@ from repro.analysis.diagnostics import Diagnostic, Severity
 
 _MB = 1024 ** 2
 
-#: the five public kernel entry points the checker must cover
-ENTRY_POINTS = ("flash_attention", "decode_attention", "ssd_chunked",
+#: the six public kernel entry points the checker must cover
+ENTRY_POINTS = ("flash_attention", "decode_attention",
+                "paged_decode_attention", "ssd_chunked",
                 "ssd_intra_chunk", "slstm_scan")
 
 
@@ -95,6 +96,36 @@ def _decode_case(name, *, B, H, D, T, K, dtype="bfloat16",
         name, "decode_attention", (q, kv, kv, lengths),
         dict(softcap=softcap, block_k=block_k),
         plan_fn=lambda: decode_block_plan(B, H, D, T, K, block_k, dtype),
+        expected_fn=expected)
+
+
+def _paged_decode_case(name, *, B, H, D, T, K, page_size=16,
+                       dtype="bfloat16", softcap=0.0):
+    """Paged variant of the decode shape: same B/H/D/K as the dense
+    decode case, with the T-token KV budget carved into pages (one
+    sequence's worst case = T tokens, pool sized for B sequences)."""
+    from repro.kernels import ref
+    from repro.kernels.plan import paged_decode_block_plan
+
+    n_max = -(-T // page_size)
+    n_pages = B * n_max
+    q = _sds((B, H, D), dtype)
+    kv = _sds((n_pages, page_size, K, D), dtype)
+    tables = _sds((B, n_max), "int32")
+    lengths = _sds((B,), "int32")
+
+    def expected():
+        import jax
+
+        return jax.eval_shape(functools.partial(
+            ref.paged_decode_attention_ref, softcap=softcap),
+            q, kv, kv, tables, lengths)
+
+    return KernelCase(
+        name, "paged_decode_attention", (q, kv, kv, tables, lengths),
+        dict(softcap=softcap),
+        plan_fn=lambda: paged_decode_block_plan(B, H, D, page_size, n_max,
+                                                n_pages, K, dtype),
         expected_fn=expected)
 
 
@@ -184,6 +215,11 @@ def zoo_cases() -> list[KernelCase]:
                      T=4096, K=g.n_kv_heads, softcap=g.attn_logit_softcap),
         _decode_case("llama3-8b/decode", B=4, H=l3.n_heads, D=l3.head_dim,
                      T=8192, K=l3.n_kv_heads),
+        _paged_decode_case("gemma2-9b/paged-decode", B=4, H=g.n_heads,
+                           D=g.head_dim, T=4096, K=g.n_kv_heads,
+                           softcap=g.attn_logit_softcap),
+        _paged_decode_case("llama3-8b/paged-decode", B=4, H=l3.n_heads,
+                           D=l3.head_dim, T=8192, K=l3.n_kv_heads),
         _slstm_case("xlstm-1.3b/scan", B=1, S=512, d=xl.d_model,
                     H=xl.n_heads, hd=xl.d_model // xl.n_heads,
                     block_s=xl.xlstm_chunk),

@@ -26,6 +26,12 @@ the ``ModuleRegistry`` and the pinned plan options), emits structured
   model references (eviction leftovers).
 * ``plan/unknown-option``      — a plan kwarg the pinned strategy does
   not accept (typo catcher; strategies swallow unknown ``**_``).
+* ``plan/page-budget``         — a generative head's paged-KV pool
+  (``decode_pages * page_size * kv_bytes_per_token``) does not fit next
+  to the weights already on its host (``check_page_budget``, run by the
+  ``serve()`` pre-flight with the scheduler's actual decode knobs).
+* ``plan/kv-unspecified``      — a generative head declares no
+  ``kv_bytes_per_token``, so its page pool cannot be budgeted.
 """
 
 from __future__ import annotations
@@ -145,6 +151,62 @@ def check_plan(
     if placement_name and plan_opts:
         diags += _check_plan_opts(placement_name, plan_opts)
 
+    return diags
+
+
+def check_page_budget(
+    placement: Placement,
+    cluster: ClusterSpec,
+    models: list[ModelSpec],
+    *,
+    decode_pages: int,
+    page_size: int,
+) -> list[Diagnostic]:
+    """Paged-KV memory ledger for generative heads: each head's decode
+    stream allocates ``decode_pages`` pages of ``page_size`` tokens, at
+    ``ModuleSpec.kv_bytes_per_token`` bytes per token, resident on the
+    head's host next to every module weight already placed there."""
+    diags: list[Diagnostic] = []
+    heads: dict[str, ModuleSpec] = {}
+    for mdl in models:
+        if mdl.head.generative:
+            heads.setdefault(mdl.head.name, mdl.head)
+    if not heads:
+        return diags
+
+    bytes_of = dict(placement.module_bytes)
+    module_specs = {m.name: m for mdl in models for m in mdl.modules}
+    for key in placement.assignment:
+        if key not in bytes_of:
+            spec = module_specs.get(key.split("::", 1)[0])
+            bytes_of[key] = spec.mem_bytes if spec else 0
+    cap = {d.name: d.mem_capacity for d in cluster.devices}
+
+    for name, head in sorted(heads.items()):
+        if head.kv_bytes_per_token <= 0:
+            diags.append(Diagnostic(
+                Severity.WARNING, "plan/kv-unspecified",
+                f"generative head {name!r} declares no kv_bytes_per_token; "
+                "its page pool cannot be checked against device memory",
+                entity=name,
+                hint="set ModuleSpec.kv_bytes_per_token = "
+                     "2 * n_layers * n_kv_heads * head_dim * bytes/elt"))
+            continue
+        pool = decode_pages * page_size * head.kv_bytes_per_token
+        for host in placement.assignment.get(name, ()):
+            if host not in cap:
+                continue                 # plan/unknown-device covers it
+            used = placement.bytes_used_on(host, bytes_of)
+            if used + pool > cap[host]:
+                diags.append(Diagnostic(
+                    Severity.ERROR, "plan/page-budget",
+                    f"paged-KV pool of head {name!r} "
+                    f"({decode_pages} pages x {page_size} tokens = "
+                    f"{pool / _MB:.1f} MB) does not fit on {host!r}: "
+                    f"weights already use {used / _MB:.1f} of "
+                    f"{cap[host] / _MB:.1f} MB", entity=name,
+                    hint="lower decode_pages/page_size in serve(), or "
+                         "move the head to a larger device"))
     return diags
 
 

@@ -21,6 +21,12 @@ class ModuleSpec:
     flops_per_query: float = 0.0  # fallback compute model: flops/speed
     input_bytes: int = 600_000    # request payload routed to this module
     output_bytes: int = 4_096     # embedding forwarded to the head
+    # generative (decoder) heads: requests stream tokens through the
+    # paged-KV decode substrate instead of a single head call
+    generative: bool = False
+    # per-token KV-cache footprint summed over layers (bytes); feeds the
+    # plan_check page-budget ledger for generative heads
+    kv_bytes_per_token: int = 0
 
     @property
     def mem_bytes(self) -> int:

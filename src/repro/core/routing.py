@@ -54,6 +54,14 @@ class Request:
     # live-execution payloads: modality -> array, and head kwargs
     inputs: Any = field(default=None, compare=False, repr=False)
     head_extra: Any = field(default=None, compare=False, repr=False)
+    # generative requests (models whose head is ModuleSpec.generative):
+    # prompt token ids plus decode controls.  The scheduler streams such
+    # requests through the paged-KV decode substrate.
+    prompt: tuple[int, ...] | None = None
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # <= 0: greedy (deterministic)
+    eos_id: int = -1              # -1: never stop early
+    slo_deadline: float | None = None   # seconds from admit; orders admission
 
     def work_of(self, modality: str) -> float:
         for k, v in self.work:

@@ -28,6 +28,19 @@ def decode_attention(q, k, v, lengths, *, softcap=0.0, block_k=512,
                    interpret=interpret)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           softcap=0.0, interpret=False):
+    """Batched paged-KV decode: k/v live in a global page pool
+    (n_pages, page_size, K, D); block_tables (B, n_max) names each
+    sequence's pages; lengths (B,) masks ragged tails."""
+    from repro.kernels.paged_decode_attention import (
+        paged_decode_attention as _paged,
+    )
+
+    return _paged(q, k_pages, v_pages, block_tables, lengths,
+                  softcap=softcap, interpret=interpret)
+
+
 def ssd_chunked(x, Bm, Cm, dt, A_log, *, chunk=128, initial_state=None,
                 interpret=False):
     """Unchunked interface: x (B,S,H,P), Bm/Cm (B,S,N), dt (B,S,H)."""

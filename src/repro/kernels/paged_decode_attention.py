@@ -1,0 +1,126 @@
+"""Batched paged-KV decode attention — the serving substrate kernel.
+
+The KV cache is a global pool of fixed-size pages ``(n_pages,
+page_size, K, D)``; each sequence owns a *block table* row naming the
+pages that hold its keys/values in order.  Grid = (B*H, n_max): one
+query row per program, one page per grid step.  Both the block tables
+and the per-sequence lengths arrive as scalar-prefetch operands (SMEM),
+so the page gather happens inside the k/v BlockSpec ``index_map`` —
+the DMA engine fetches exactly the pages a sequence owns, and ragged
+lengths are masked with zero extra HBM traffic.  The body is the same
+flash-decoding streaming softmax as ``decode_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.plan import paged_decode_block_plan
+
+NEG_INF = -2.0e38
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, softcap, ps, n_max, n_heads):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (1, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (ps, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (1, ps)
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # token position of each key in this page; pages past the
+    # sequence's length (garbage table entries clamp to page 0) are
+    # fully masked, contributing nothing.
+    length = len_ref[bh // n_heads]
+    k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    safe = m_new > NEG_INF / 2
+    p = jnp.exp(s - jnp.where(safe, m_new, 0.0)[:, None])
+    p = jnp.where(k_pos < length, p, 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2,
+                      jnp.exp(m_prev - jnp.where(safe, m_new, 0.0)), 0.0)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_max - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_decode_attention(
+    q, k_pages, v_pages, block_tables, lengths, *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+):
+    """q: (B,H,D); k_pages/v_pages: (n_pages, page_size, K, D);
+    block_tables: (B, n_max) page ids; lengths: (B,) valid key counts.
+    Returns (B,H,D).  Table entries past a sequence's page count may be
+    arbitrary — they are clamped into range and masked by ``lengths``.
+    """
+    B, H, D = q.shape
+    P, ps, K = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    n_max = block_tables.shape[1]
+    plan = paged_decode_block_plan(B, H, D, ps, n_max, P, K, q.dtype)
+    G = plan.meta["G"]
+    scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * H, 1, D)
+    tables = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, ps=ps, n_max=n_max,
+        n_heads=H)
+
+    def kv_map(bh, j, tbl, lens, G=G, H=H):
+        # scalar-prefetch page gather: block index 0 of the page axis is
+        # the table entry itself (block size 1 along that axis)
+        return (tbl[bh // H, j], 0, (bh % H) // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * H, n_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda bh, j, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), kv_map),
+            pl.BlockSpec((1, ps, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, j, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        interpret=interpret,
+    )(tables, lengths.astype(jnp.int32), qf, k_pages, v_pages)
+    return out.reshape(B, H, D)

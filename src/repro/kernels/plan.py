@@ -129,6 +129,46 @@ def decode_block_plan(B: int, H: int, D: int, T: int, K: int,
         meta={"bk": bk, "n_kv": T // bk, "G": H // K})
 
 
+def paged_decode_block_plan(B: int, H: int, D: int, page_size: int,
+                            n_max: int, n_pages: int, K: int,
+                            dtype) -> BlockPlan:
+    """Geometry for ``paged_decode_attention``: grid (B*H, n_max).
+
+    The KV cache is a global pool of ``n_pages`` fixed-size pages
+    (page_size, K, D); each program's j-th step DMAs the page named by
+    the scalar-prefetched block table entry ``table[b, j]`` — the page
+    gather happens in the BlockSpec index_map, so the kernel body is the
+    same streaming softmax as ``decode_attention`` with bk=page_size.
+    """
+    if K <= 0 or H % K:
+        raise KernelPlanError(
+            f"paged_decode_attention: q heads H={H} must be a multiple "
+            f"of kv heads K={K} (GQA folding)")
+    if page_size < 1 or n_max < 1 or n_pages < 1:
+        raise KernelPlanError(
+            f"paged_decode_attention: page_size={page_size}, "
+            f"n_max={n_max}, n_pages={n_pages} must all be >= 1")
+    if n_pages < n_max:
+        raise KernelPlanError(
+            f"paged_decode_attention: a single sequence's block table "
+            f"has n_max={n_max} entries but the pool only holds "
+            f"n_pages={n_pages} pages; shrink max_seq_len/page count "
+            "mismatch or grow the pool")
+    ps = page_size
+    f32 = "float32"
+    return BlockPlan(
+        kernel="paged_decode_attention",
+        grid=(B * H, n_max),
+        blocks={"q": (1, 1, D), "k": (1, ps, 1, D), "v": (1, ps, 1, D),
+                "o": (1, 1, D)},
+        vmem_bytes=_vmem(
+            streamed={"q": ((1, 1, D), dtype), "k": ((1, ps, 1, D), dtype),
+                      "v": ((1, ps, 1, D), dtype), "o": ((1, 1, D), dtype)},
+            resident={"m": ((1,), f32), "l": ((1,), f32),
+                      "acc": ((1, D), f32), "scores": ((1, ps), f32)}),
+        meta={"ps": ps, "n_max": n_max, "n_pages": n_pages, "G": H // K})
+
+
 def ssd_block_plan(B: int, S: int, H: int, P: int, N: int,
                    chunk: int, dtype) -> BlockPlan:
     """Geometry for ``ssd_chunked`` / ``ssd_intra_chunk``: one

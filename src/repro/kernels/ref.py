@@ -49,6 +49,24 @@ def decode_attention_ref(q, k, v, lengths, *, softcap=0.0):
     return out[:, 0]
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               *, softcap=0.0):
+    """q: (B,H,D); k_pages/v_pages: (n_pages, page_size, K, D);
+    block_tables: (B, n_max) page ids; lengths: (B,) valid key counts.
+
+    Gathers each sequence's pages into a contiguous (B, n_max*ps, K, D)
+    view and defers to ``decode_attention_ref`` — positions past
+    ``lengths`` (including garbage pages) are masked there.
+    """
+    B = q.shape[0]
+    P, ps, K, D = k_pages.shape
+    n_max = block_tables.shape[1]
+    tables = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)
+    k = k_pages[tables].reshape(B, n_max * ps, K, D)
+    v = v_pages[tables].reshape(B, n_max * ps, K, D)
+    return decode_attention_ref(q, k, v, lengths, softcap=softcap)
+
+
 def ssd_chunk_ref(x, Bm, Cm, dt, A_log, *, initial_state=None):
     """Naive per-step SSD recurrence (no D skip, no conv — pure cell).
 

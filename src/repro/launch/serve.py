@@ -48,13 +48,13 @@ def main():
                     help="routing policy for --plan (paper | queue_aware)")
     args = ap.parse_args()
 
-    import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.common.config import get_config
+    from repro.core.routing import Request
     from repro.models.api import build_model
-    from repro.serving.generator import GenRequest, LMServer
+    from repro.serving.scheduler import SchedulerConfig, lm_scheduler
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.plan:
@@ -62,32 +62,44 @@ def main():
         return
     bundle = build_model(cfg, compute_dtype=jnp.float32)
     print(f"[serve] {cfg.name} params={bundle.param_count():,}")
-    server = LMServer(bundle, max_batch=args.max_batch,
-                      cache_len=args.cache_len)
 
     rng = np.random.default_rng(0)
+    reqs = []
     for i in range(args.requests):
-        extras = {}
+        inputs = {}
         if cfg.has_vision_stub:
-            extras["image_embeds"] = 0.1 * rng.standard_normal(
+            inputs["vision"] = 0.1 * rng.standard_normal(
                 (cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
         if cfg.is_encoder_decoder:
-            extras["audio_frames"] = 0.1 * rng.standard_normal(
+            inputs["audio"] = 0.1 * rng.standard_normal(
                 (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
-        prompt = rng.integers(1, cfg.vocab_size,
-                              size=rng.integers(2, 8)).tolist()
-        server.submit(GenRequest(rid=i, prompt=prompt,
-                                 max_new_tokens=args.max_new,
-                                 temperature=args.temperature,
-                                 extras=extras))
+        prompt = tuple(rng.integers(1, cfg.vocab_size,
+                                    size=rng.integers(2, 8)).tolist())
+        reqs.append(Request(rid=i, model="lm", source="dev0", prompt=prompt,
+                            max_new_tokens=args.max_new,
+                            temperature=args.temperature,
+                            inputs=inputs or None))
     t0 = time.time()
-    done = server.run()
+    if bundle.supports_paged_decode:
+        sched = lm_scheduler(bundle, config=SchedulerConfig(
+            decode_rows=args.max_batch, max_seq_len=args.cache_len,
+            page_size=16,
+            decode_pages=args.max_batch * (-(-args.cache_len // 16)) + 1))
+        done = sched.serve(reqs)
+        steps = sched.stats_dict()[cfg.name]["decode_steps"]
+    else:
+        # encoder-decoder families have no paged decode path: fall back
+        # to solo prefill+decode per request on a bare engine
+        sched = lm_scheduler(bundle)
+        done = [sched.engine.generate(q) for q in reqs]
+        steps = sum(len(r.output) for r in done)
     dt = time.time() - t0
     total = sum(len(r.output) for r in done)
     for r in done[:4]:
-        print(f"  req {r.rid}: {r.output[:12]}{'...' if len(r.output)>12 else ''}")
+        toks = list(r.output[:12])
+        print(f"  req {r.rid}: {toks}{'...' if len(r.output) > 12 else ''}")
     print(f"[serve] {len(done)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s, {server._steps} batched decode steps)")
+          f"({total/dt:.1f} tok/s, {steps} batched decode steps)")
 
 
 if __name__ == "__main__":

@@ -269,6 +269,33 @@ def cache_insert(cache_arr, new_val, lengths, *, mode: str = "scatter",
         new_val[:, 0].astype(cache_arr.dtype))
 
 
+def paged_cache_insert(pages, new_val, block_tables, lengths):
+    """Insert new_val (B, 1, ...) into a paged cache (n_pages,
+    page_size, ...) at per-sequence position ``lengths``, resolving the
+    owning page through ``block_tables`` (B, n_max).
+
+    Live sequences never share pages, so the batched scatter indices
+    are unique across rows; rows whose table points at a dummy page
+    (dead decode rows) collide only with each other, on a page no
+    sequence reads.
+    """
+    ps = pages.shape[1]
+    B = new_val.shape[0]
+    n_max = block_tables.shape[1]
+    page = block_tables[jnp.arange(B), jnp.clip(lengths // ps, 0, n_max - 1)]
+    off = lengths % ps
+    return pages.at[page, off].set(new_val[:, 0].astype(pages.dtype))
+
+
+def paged_gather(pages, block_tables):
+    """Materialize each sequence's pages contiguously: (n_pages, ps,
+    ...) + tables (B, n_max) -> (B, n_max*ps, ...) — the XLA-path view
+    the paged Pallas kernel avoids building."""
+    B, n_max = block_tables.shape
+    ps = pages.shape[1]
+    return pages[block_tables].reshape(B, n_max * ps, *pages.shape[2:])
+
+
 def _cache_insert_shardmap(cache_arr, new_val, lengths, mesh, rules):
     import numpy as np
 

@@ -51,6 +51,11 @@ class ModelBundle:
     batch_specs: Callable            # (ShapeConfig) -> WSpec tree
     mesh: Any = None
     rules: Any = None
+    # paged-KV decode (serving substrate); None for cache families the
+    # page layout doesn't cover (state-space / MLA / enc-dec caches)
+    paged_decode_step: Callable | None = None   # (params, tokens, cache,
+    #                                              block_tables, lengths)
+    paged_cache_specs: Callable | None = None   # (n_pages, page_size, dtype)
 
     def init(self, key, param_dtype=jnp.float32):
         return init_tree(key, self.specs, param_dtype)
@@ -63,6 +68,19 @@ class ModelBundle:
 
     def init_cache(self, B: int, T: int, dtype=jnp.bfloat16):
         return init_tree(jax.random.PRNGKey(0), self.cache_specs(B, T, dtype))
+
+    @property
+    def supports_paged_decode(self) -> bool:
+        return self.paged_decode_step is not None
+
+    def init_paged_cache(self, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        if self.paged_cache_specs is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged-KV cache layout "
+                "(only pure-attention caches page)")
+        return init_tree(jax.random.PRNGKey(0),
+                         self.paged_cache_specs(n_pages, page_size, dtype))
 
     def active_param_count(self) -> int:
         """Parameters touched per token (MoE: top-k of routed experts)."""
@@ -108,6 +126,7 @@ def _make_ctx(cfg, mesh, rules, mode, positions, lengths, opts):
         "unroll": opts.get("scan_unroll", False),
         "cache_update": opts.get("cache_update", "scatter"),
         "decode_attn": opts.get("decode_attn", "default"),
+        "paged_attn": opts.get("paged_attn", "xla"),
         "attn_sp": opts.get("attn_sp", False),
         "softmax_dtype": opts.get("softmax_dtype", jnp.float32),
         "rules": rules,
@@ -302,6 +321,31 @@ def build_model(cfg: ArchConfig, mesh=None, rules=None, **opts) -> ModelBundle:
         logits = _logits(cfg, params, h)[:, 0]
         return logits, new_caches
 
+    # ---- paged decode (serving substrate) ----
+    # Every (dense/vlm) stage cache is a {"k","v"} pytree whose leaves
+    # are (B, T, K, D): re-parameterizing (B, T) as (n_pages, page_size)
+    # yields the global page pool the batched paged decode kernel and
+    # block-table scatter consume.  State-space / MLA / enc-dec caches
+    # don't fit the page layout; those bundles keep the fields None.
+    paged_supported = cfg.family in ("dense", "vlm")
+
+    def paged_decode_step(params, tokens, cache, block_tables, lengths):
+        h = embed_apply(
+            params["embed"], tokens,
+            scale=math.sqrt(cfg.d_model) if cfg.embed_scale_by_dim else 1.0,
+            dtype=compute_dtype)
+        positions = lengths[:, None].astype(jnp.int32)
+        ctx = _make_ctx(cfg, mesh, rules, "decode", positions, lengths, opts)
+        ctx["cache_layout"] = "paged"
+        ctx["block_tables"] = block_tables
+        h, _, new_caches = _run_backbone(stages, params, h, ctx, cache)
+        h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+        logits = _logits(cfg, params, h)[:, 0]
+        return logits, new_caches
+
+    def paged_cache_specs(n_pages, page_size, dtype=jnp.bfloat16):
+        return cache_specs(n_pages, page_size, dtype)
+
     # ---- cache / batch specs ----
     def cache_specs(B, T, dtype=jnp.bfloat16):
         out = {}
@@ -347,4 +391,6 @@ def build_model(cfg: ArchConfig, mesh=None, rules=None, **opts) -> ModelBundle:
         cfg=cfg, specs=specs, loss_fn=loss_fn, prefill=prefill,
         decode_step=decode_step, cache_specs=cache_specs,
         batch_specs=batch_specs, mesh=mesh, rules=rules,
+        paged_decode_step=paged_decode_step if paged_supported else None,
+        paged_cache_specs=paged_cache_specs if paged_supported else None,
     )

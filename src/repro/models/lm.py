@@ -139,6 +139,10 @@ def _apply_attn_sub(p, h, cache, ctx, cfg, *, local: bool, post_norm: bool):
                             ctx["rules"], ctx["mesh"])
             q = jax.lax.with_sharding_constraint(
                 q, jax.sharding.NamedSharding(ctx["mesh"], spec))
+        if ctx.get("cache_layout") == "paged":
+            return _paged_attn_decode(p, h, x, cache, q, k_new, v_new,
+                                      ctx, cfg, local=local,
+                                      post_norm=post_norm)
         mode = ctx.get("cache_update", "scatter")
         k_cache = attn.cache_insert(cache["k"], k_new, lengths, mode=mode,
                                     mesh=ctx["mesh"], rules=ctx.get("rules"))
@@ -166,6 +170,48 @@ def _apply_attn_sub(p, h, cache, ctx, cfg, *, local: bool, post_norm: bool):
     if post_norm:
         y = apply_norm(p["ln_attn_post"], y, cfg.norm, cfg.norm_eps)
     return h + y, new_cache
+
+
+def _paged_attn_decode(p, h, x, cache, q, k_new, v_new, ctx, cfg, *,
+                       local: bool, post_norm: bool):
+    """Decode step against a paged KV cache: cache leaves are global
+    page pools (n_pages, page_size, K, D); ``ctx["block_tables"]``
+    (B, n_max) names each row's pages.  ``ctx["paged_attn"]`` picks the
+    attention path: "pallas"/"pallas_interpret" run the batched paged
+    kernel; "xla" (default, and any local/windowed layer — the kernel
+    has no window support) gathers the owned pages and reuses
+    gqa_scores."""
+    lengths = ctx["lengths"]
+    tables = ctx["block_tables"]
+    B = x.shape[0]
+    k_cache = attn.paged_cache_insert(cache["k"], k_new, tables, lengths)
+    v_cache = attn.paged_cache_insert(cache["v"], v_new, tables, lengths)
+    impl = ctx.get("paged_attn", "xla")
+    window = cfg.sliding_window if local else 0
+    if impl in ("pallas", "pallas_interpret") and not window:
+        from repro.kernels import ops as kops
+
+        out = kops.paged_decode_attention(
+            q[:, 0], k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+            tables, lengths + 1,
+            softcap=cfg.attn_logit_softcap,
+            interpret=(impl == "pallas_interpret"))[:, None]
+    else:
+        k_seq = attn.paged_gather(k_cache, tables)
+        v_seq = attn.paged_gather(v_cache, tables)
+        T = k_seq.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        kv_valid = kv_pos < (lengths + 1)[:, None]
+        out = attn.gqa_scores(
+            q, k_seq.astype(x.dtype), v_seq.astype(x.dtype),
+            q_positions=ctx["positions"], kv_positions=kv_pos,
+            causal=True, window=window,
+            softcap=cfg.attn_logit_softcap, kv_valid=kv_valid,
+        )
+    y = attn.output_proj(p["attn"], out, x.dtype)
+    if post_norm:
+        y = apply_norm(p["ln_attn_post"], y, cfg.norm, cfg.norm_eps)
+    return h + y, {"k": k_cache, "v": v_cache}
 
 
 def _apply_ffn_sub(p, h, ctx, cfg, *, use_moe: bool, post_norm: bool):

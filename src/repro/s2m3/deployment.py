@@ -204,20 +204,25 @@ class Deployment:
 
     # -- verification ---------------------------------------------------
     def verify(self, *, kernels: bool = False,
-               vmem_budget: int | None = None) -> list:
+               vmem_budget: int | None = None,
+               decode_pages: int | None = None,
+               page_size: int | None = None) -> list:
         """Static pre-flight: run the ``repro.analysis`` plan verifier
         against the current plan (memory ledgers, mapping completeness,
-        acyclicity, reachability, refcounts, sharing legality) and —
-        with ``kernels=True`` — the Pallas kernel checker over the zoo's
-        shapes.  Returns the ``Diagnostic`` list and raises nothing;
-        ``materialize()``/``serve()`` call it and raise ``PlanError``
-        when it reports ERRORs."""
+        acyclicity, reachability, refcounts, sharing legality, and —
+        when decode knobs are given — generative heads' paged-KV page
+        budgets) and, with ``kernels=True``, the Pallas kernel checker
+        over the zoo's shapes.  Returns the ``Diagnostic`` list and
+        raises nothing; ``materialize()``/``serve()`` call it and raise
+        ``PlanError`` when it reports ERRORs."""
         from repro.analysis import verify_deployment
 
         return verify_deployment(self, kernels=kernels,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget,
+                                 decode_pages=decode_pages,
+                                 page_size=page_size)
 
-    def _preflight(self, stage: str) -> None:
+    def _preflight(self, stage: str, **verify_kwargs) -> None:
         """Gate a device-touching stage on the static verifier: ERROR
         findings raise ``PlanError`` (with the full diagnostic list
         attached), WARNINGs are logged and execution proceeds."""
@@ -225,7 +230,7 @@ class Deployment:
 
         from repro.analysis.diagnostics import PlanError, errors, warnings
 
-        diags = self.verify()
+        diags = self.verify(**verify_kwargs)
         log = logging.getLogger("repro.s2m3")
         for d in warnings(diags):
             log.warning("%s pre-flight: %s", stage, d.format())
@@ -297,7 +302,12 @@ class Deployment:
 
     def submit(self, request: Request):
         """Execute a Request for real: the engine runs the same model the
-        simulator predicted, consuming ``request.inputs``."""
+        simulator predicted, consuming ``request.inputs``.  Generative
+        models (head is ``ModuleSpec.generative``) run the solo
+        prefill+decode loop and return their token ids as ``output``."""
+        model = self.registry.models[request.model]
+        if model.head.generative:
+            return self._require_engine().generate(request)
         if request.inputs is None:
             raise ValueError(
                 f"request {request.rid} has no inputs payload; submit() "
@@ -312,22 +322,35 @@ class Deployment:
 
     def serve(self, workload: list[Request], *,
               max_batch: int = 8, max_queue_depth: int = 32,
-              admission: str = "block", config: Any = None):
+              admission: str = "block", decode_rows: int = 4,
+              decode_pages: int = 64, page_size: int = 16,
+              max_seq_len: int = 256, on_finish: Callable | None = None,
+              config: Any = None):
         """Drain ``workload`` through the continuous-batching scheduler:
         per-module queues, admission control, and cross-task batch
         coalescing at shared encoders (one encoder launch can serve
-        requests from several tasks).  Returns one ``InferenceResult``
-        per request, in workload order; ``self.scheduler`` keeps the
-        queue/batch-occupancy stats of the run (``stats_dict()``),
-        directly comparable with ``simulate(coalesce_window=...)``."""
+        requests from several tasks).  Generative requests (models whose
+        head is ``ModuleSpec.generative``) stream through the paged-KV
+        decode substrate: admission against a page pool of
+        ``decode_pages`` pages of ``page_size`` tokens, up to
+        ``decode_rows`` sequences decoding per batched launch;
+        ``on_finish`` (if given) is called with each ``InferenceResult``
+        as its sequence finishes, i.e. out of admission order.  Returns
+        one ``InferenceResult`` per request, in workload order;
+        ``self.scheduler`` keeps the queue/batch-occupancy and
+        page-occupancy stats of the run (``stats_dict()``), directly
+        comparable with ``simulate(coalesce_window=...)``."""
         from repro.serving.scheduler import SchedulerConfig, ServeScheduler
 
         eng = self._require_engine()
-        self._preflight("serve")
-        cfg = config or SchedulerConfig(max_batch=max_batch,
-                                        max_queue_depth=max_queue_depth,
-                                        admission=admission)
-        self.scheduler = ServeScheduler(eng, config=cfg)
+        cfg = config or SchedulerConfig(
+            max_batch=max_batch, max_queue_depth=max_queue_depth,
+            admission=admission, decode_rows=decode_rows,
+            decode_pages=decode_pages, page_size=page_size,
+            max_seq_len=max_seq_len)
+        self._preflight("serve", decode_pages=cfg.decode_pages,
+                        page_size=cfg.page_size)
+        self.scheduler = ServeScheduler(eng, config=cfg, on_finish=on_finish)
         return self.scheduler.serve(workload)
 
     # -- elasticity -----------------------------------------------------

@@ -1,0 +1,302 @@
+"""Paged continuous-batching decode streams — the generative half of the
+serving scheduler.
+
+One ``DecodeStream`` per generative decoder module: it owns the module's
+page pool (``PagePool``), the fixed-width decode rows (``SlotPool``),
+and the paged KV cache the engine decodes against.  Requests arrive from
+``ServeScheduler`` after their encoder stages complete; each is admitted
+into a free row via a batch-1 prefill scattered into freshly allocated
+pages, then all live rows — across *tasks*, this is the S2M3 sharing
+argument applied to generative heads — decode together in one batched
+``paged_decode_attention`` launch per step.
+
+Admission reserves each sequence's worst-case page count up front
+(``n_prefix + len(prompt) + max_new_tokens``), so mid-stream ``extend``
+can never fail and no preemption is needed; the waiting queue is ordered
+by SLO deadline (earliest first), then arrival.  Dead rows point their
+block-table entries at a reserved dummy page (page 0), so the batched
+scatter never corrupts a live sequence.
+
+Lock discipline (enforced by ``repro.analysis.concurrency_lint``): all
+allocator calls and shared-state mutation happen under ``self._lock``;
+prefill/decode dispatch happens outside it.  A tick-level busy flag
+keeps concurrent ``tick()`` calls from interleaving device steps.
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import Request
+from repro.serving.kvcache import PagePool, SlotPool, insert_pages
+from repro.serving.sampler import select_token
+
+_DUMMY = "<dummy>"
+
+
+@dataclass
+class _GenSeq:
+    """One generative request's decode state."""
+
+    rid: int
+    request: Request
+    enc_outputs: dict[str, Any]
+    t_submit: float
+    tokens: list[int] = field(default_factory=list)
+    row: int = -1
+    length: int = 0                 # tokens currently in the paged cache
+    rng: Any = None
+    done: bool = False
+    timeline: list = field(default_factory=list)
+
+
+@dataclass
+class TickReport:
+    finished: list[_GenSeq]
+    prefills: int = 0
+    decode_batch: int = 0
+
+
+class DecodeStream:
+    """Continuous-batching decode state for one generative module."""
+
+    def __init__(self, engine, module: str, *, rows: int, n_pages: int,
+                 page_size: int, max_seq_len: int, now=None):
+        self.engine = engine
+        self.module = module
+        self.rt = engine.decoder_runtime(module)
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.n_max = -(-max_seq_len // page_size)
+        self.pool = PagePool(n_pages, page_size)
+        self.rows = SlotPool(rows)
+        self._now = now or (lambda: 0.0)
+        self.cache = engine.init_paged_cache(module, n_pages, page_size,
+                                             jnp.float32)
+        self._lock = threading.RLock()
+        with self._lock:
+            # page 0 is the dummy target for dead rows' scatters
+            self.pool.alloc(_DUMMY, 1)
+        self.waiting: list = []           # heap: (deadline, t, n, seq)
+        self._n_submitted = 0
+        self.live: dict[int, _GenSeq] = {}
+        self.tables = np.zeros((rows, self.n_max), np.int32)
+        self.lengths = np.zeros((rows,), np.int32)
+        self._worst: dict[int, int] = {}  # rid -> reserved worst pages
+        self._reserved = 0
+        self._busy = False
+        # counters (read via stats_dict)
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.prefills = 0
+        self.cross_task_decode_batches = 0
+
+    # -- sizing ---------------------------------------------------------
+    def _worst_tokens(self, request: Request) -> int:
+        return (self.rt.n_prefix + len(request.prompt)
+                + max(int(request.max_new_tokens), 1))
+
+    def validate(self, request: Request) -> None:
+        if request.prompt is None or len(request.prompt) == 0:
+            raise ValueError(
+                f"generative request {request.rid} has no prompt tokens")
+        worst = self._worst_tokens(request)
+        if worst > self.max_seq_len:
+            raise ValueError(
+                f"request {request.rid}: prefix+prompt+max_new_tokens="
+                f"{worst} exceeds max_seq_len={self.max_seq_len} of "
+                f"decoder {self.module!r}")
+        if self.pool.pages_for(worst) > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request {request.rid}: needs {self.pool.pages_for(worst)} "
+                f"pages, pool holds {self.pool.n_pages - 1} usable")
+
+    # -- admission ------------------------------------------------------
+    def depth(self) -> int:
+        with self._lock:
+            return len(self.waiting) + len(self.live)
+
+    def submit(self, rid: int, request: Request,
+               enc_outputs: dict[str, Any]) -> None:
+        self.validate(request)
+        seq = _GenSeq(rid, request, enc_outputs, self._now())
+        deadline = (request.slo_deadline if request.slo_deadline is not None
+                    else float("inf"))
+        with self._lock:
+            heapq.heappush(self.waiting,
+                           (deadline, seq.t_submit, self._n_submitted, seq))
+            self._n_submitted += 1
+
+    def _outstanding_pages(self) -> int:
+        """Reserved-but-not-yet-held pages across live sequences."""
+        held = self.pool.n_live_pages - 1          # minus the dummy page
+        return self._reserved - held
+
+    def _pop_admittable(self) -> _GenSeq | None:
+        """Admit the head of the waiting queue if a row and its
+        worst-case page reservation fit; head-of-line order keeps the
+        SLO-deadline priority honest.  Takes the (re-entrant) lock
+        itself so allocator calls are locked at every call site."""
+        with self._lock:
+            if not self.waiting:
+                return None
+            seq = self.waiting[0][3]
+            worst = self.pool.pages_for(self._worst_tokens(seq.request))
+            if self.pool.n_free - self._outstanding_pages() < worst:
+                return None
+            row = self.rows.alloc()
+            if row is None:
+                return None
+            heapq.heappop(self.waiting)
+            prefix_len = self.rt.n_prefix + len(seq.request.prompt)
+            pages = self.pool.alloc(seq.rid, prefix_len)
+            seq.row = row
+            seq.length = prefix_len
+            self._worst[seq.rid] = worst
+            self._reserved += worst
+            self.tables[row, :] = 0
+            self.tables[row, :len(pages)] = pages
+            self.lengths[row] = prefix_len
+            self.live[row] = seq
+            return seq
+
+    def _finish_locked(self, seq: _GenSeq) -> None:
+        with self._lock:
+            seq.done = True
+            self.pool.free(seq.rid)
+            self.rows.release(seq.row)
+            del self.live[seq.row]
+            self.tables[seq.row, :] = 0
+            self.lengths[seq.row] = 0
+            self._reserved -= self._worst.pop(seq.rid)
+
+    # -- execution ------------------------------------------------------
+    def _prefill(self, seq: _GenSeq) -> None:
+        """Batch-1 prefill into the sequence's pages + first token.
+        Device dispatch — runs outside the lock."""
+        req = seq.request
+        with self._lock:
+            pages = self.pool.block_table(seq.rid)
+        span = len(pages) * self.page_size
+        one = self.rt.bundle.init_cache(1, span, jnp.float32)
+        t0 = self._now()
+        batch = self.engine.gen_batch(req.prompt, seq.enc_outputs)
+        logits, one = self.engine.apply_prefill(self.module, batch, one)
+        self.cache = insert_pages(self.cache, one, pages, seq.length)
+        seq.rng = jax.random.PRNGKey((seq.rid or 0) & 0x7FFFFFFF)
+        seq.rng, k = jax.random.split(seq.rng)
+        tok = int(select_token(logits[0], k, temperature=req.temperature))
+        seq.tokens.append(tok)
+        seq.timeline.append((self.module, "prefill", t0, self._now()))
+        with self._lock:
+            self.prefills += 1
+
+    def _seq_done(self, seq: _GenSeq) -> bool:
+        req = seq.request
+        return (len(seq.tokens) >= max(int(req.max_new_tokens), 1)
+                or seq.tokens[-1] == req.eos_id)
+
+    def _admit_all(self) -> list[_GenSeq]:
+        finished = []
+        while True:
+            with self._lock:
+                seq = self._pop_admittable()
+            if seq is None:
+                break
+            self._prefill(seq)
+            if self._seq_done(seq):
+                with self._lock:
+                    self._finish_locked(seq)
+                finished.append(seq)
+        return finished
+
+    def _decode_once(self) -> tuple[list[_GenSeq], int]:
+        """One batched decode step over all live rows.  Batch formation
+        (incl. page extension) under the lock; dispatch outside it."""
+        R = self.rows.max_slots
+        tokens = np.zeros((R, 1), np.int32)
+        with self._lock:
+            live = sorted(self.live.items())
+            if not live:
+                return [], 0
+            for row, seq in live:
+                # the step inserts at position length: make sure the
+                # owning page exists (reservation guarantees success)
+                added = self.pool.extend(seq.rid, seq.length + 1)
+                if added:
+                    table = self.pool.block_table(seq.rid)
+                    self.tables[row, :len(table)] = table
+                tokens[row, 0] = seq.tokens[-1]
+            tables = self.tables.copy()
+            lengths = self.lengths.copy()
+            self.decode_steps += 1
+            if len({seq.request.model for _, seq in live}) >= 2:
+                self.cross_task_decode_batches += 1
+        logits, cache = self.engine.apply_paged_decode(
+            self.module, jnp.asarray(tokens), self.cache,
+            jnp.asarray(tables), jnp.asarray(lengths))
+        self.cache = cache
+        picks: dict[int, int] = {}
+        for row, seq in live:
+            seq.rng, k = jax.random.split(seq.rng)
+            picks[row] = int(select_token(
+                logits[row], k, temperature=seq.request.temperature))
+        finished = []
+        with self._lock:
+            for row, seq in live:
+                seq.length += 1
+                self.lengths[row] = seq.length
+                self.pool.used_tokens[seq.rid] = seq.length
+                seq.tokens.append(picks[row])
+                self.decode_tokens += 1
+                if self._seq_done(seq):
+                    seq.timeline.append(
+                        (self.module, "decode", seq.t_submit, self._now()))
+                    self._finish_locked(seq)
+                    finished.append(seq)
+        return finished, len(live)
+
+    def tick(self) -> TickReport:
+        """One scheduler service round: admit what fits, then one
+        batched decode step.  Returns the finished sequences."""
+        with self._lock:
+            if self._busy:
+                return TickReport([], 0, 0)
+            self._busy = True
+        try:
+            finished = self._admit_all()
+            prefills = len(finished)
+            with self._lock:
+                prefills = self.prefills
+            more, batch = self._decode_once()
+            return TickReport(finished + more, prefills, batch)
+        finally:
+            with self._lock:
+                self._busy = False
+
+    # -- stats ----------------------------------------------------------
+    def stats_dict(self) -> dict[str, Any]:
+        with self._lock:
+            frag = self.pool.fragmentation()
+            return {
+                "decode_steps": self.decode_steps,
+                "decode_tokens": self.decode_tokens,
+                "prefills": self.prefills,
+                "cross_task_decode_batches": self.cross_task_decode_batches,
+                "decode_rows": self.rows.max_slots,
+                "live_rows": len(self.live),
+                "waiting": len(self.waiting),
+                "pages_total": frag["pages_total"],
+                "pages_live": frag["pages_live"],
+                "pages_peak": frag["pages_peak"],
+                "page_occupancy": round(
+                    frag["pages_live"] / frag["pages_total"], 4),
+                "internal_frag": frag["internal_frag"],
+            }

@@ -43,6 +43,34 @@ class ModuleRuntime:
     replicas: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+#: modality -> prefill batch key for decoder extras (how encoder outputs
+#: reach a generative head's prefill, e.g. a vision encoder's embedding
+#: becoming the VLM decoder's image prefix)
+EXTRA_KEYS = {"vision": "image_embeds", "audio": "audio_frames"}
+
+
+@dataclasses.dataclass
+class DecoderRuntime:
+    """A generative head module: a ModelBundle (prefill / decode_step /
+    paged_decode_step) pinned to one host — its paged KV cache lives
+    there, so unlike stateless encoders it is not freely re-routable
+    mid-stream."""
+
+    spec: ModuleSpec
+    bundle: Any
+    params: Any
+    device: Any
+    host: str | None = None
+    prefill_jit: Callable = None
+    paged_decode_jit: Callable = None
+    decode_jit: Callable = None
+
+    @property
+    def n_prefix(self) -> int:
+        cfg = self.bundle.cfg
+        return cfg.n_image_tokens if cfg.has_vision_stub else 0
+
+
 @dataclasses.dataclass
 class InferenceResult:
     model: str
@@ -66,6 +94,7 @@ class S2M3Engine:
         through the named routing policy instead of first-host."""
         self.registry = registry or ModuleRegistry()
         self.runtimes: dict[str, ModuleRuntime] = {}
+        self.decoders: dict[str, DecoderRuntime] = {}
         self.device_map = device_map or {"dev0": jax.devices()[0]}
         self.placement: Placement | None = None
         self.cluster = cluster
@@ -92,14 +121,28 @@ class S2M3Engine:
             self.placement = placement
         loaded = []
         for m in model.modules:
-            if m.name in self.runtimes:
+            if m.name in self.runtimes or m.name in self.decoders:
                 continue                      # shared module already live
-            apply_fn, params = builders[m.name]()
+            apply_or_bundle, params = builders[m.name]()
             host = self._host_for(m.name)
             dev = self._device_for(host)
             params = jax.device_put(params, dev)
-            self.runtimes[m.name] = ModuleRuntime(
-                m, jax.jit(apply_fn), params, dev, host)
+            if hasattr(apply_or_bundle, "decode_step"):
+                # generative head: the builder returned a ModelBundle
+                bundle = apply_or_bundle
+                rt = DecoderRuntime(m, bundle, params, dev, host)
+                rt.prefill_jit = jax.jit(bundle.prefill)
+                # donated cache buffers: every decode step rebinds the
+                # cache, so the old buffer is reused in place
+                rt.decode_jit = jax.jit(bundle.decode_step,
+                                        donate_argnums=(2,))
+                if bundle.paged_decode_step is not None:
+                    rt.paged_decode_jit = jax.jit(bundle.paged_decode_step,
+                                                  donate_argnums=(2,))
+                self.decoders[m.name] = rt
+            else:
+                self.runtimes[m.name] = ModuleRuntime(
+                    m, jax.jit(apply_or_bundle), params, dev, host)
             loaded.append(m.name)
         return loaded
 
@@ -107,6 +150,7 @@ class S2M3Engine:
         freed = self.registry.remove_model(name)
         for m in freed:
             self.runtimes.pop(m.name, None)
+            self.decoders.pop(m.name, None)
         return [m.name for m in freed]
 
     def migrate(self, module_name: str, host: str) -> None:
@@ -218,6 +262,126 @@ class S2M3Engine:
         moved = {k: jax.device_put(v, dev) for k, v in enc_outputs.items()}
         return rt.apply(params, moved, **(head_extra or {})), used
 
+    # -- generative (decoder-head) path ---------------------------------
+    def decoder_runtime(self, module_name: str) -> DecoderRuntime:
+        rt = self.decoders.get(module_name)
+        if rt is None:
+            raise KeyError(
+                f"module {module_name!r} has no decoder runtime; "
+                "generative heads need a builder returning "
+                "(ModelBundle, params)")
+        return rt
+
+    @staticmethod
+    def gen_batch(prompt, enc_outputs: dict[str, Any]) -> dict[str, Any]:
+        """Batch-1 prefill inputs for a generative head: prompt tokens
+        plus encoder outputs mapped through ``EXTRA_KEYS`` (e.g. a
+        vision encoder's embedding feeding the VLM image prefix)."""
+        import jax.numpy as jnp
+
+        batch = {"tokens": jnp.asarray([list(prompt)], jnp.int32)}
+        for modality, key in EXTRA_KEYS.items():
+            if modality in enc_outputs:
+                v = jnp.asarray(enc_outputs[modality])
+                batch[key] = v if v.ndim == 3 else v[None]
+        return batch
+
+    def init_paged_cache(self, module_name: str, n_pages: int,
+                         page_size: int, dtype=None):
+        import jax.numpy as jnp
+
+        rt = self.decoder_runtime(module_name)
+        cache = rt.bundle.init_paged_cache(n_pages, page_size,
+                                           dtype or jnp.float32)
+        return jax.device_put(cache, rt.device)
+
+    def apply_prefill(self, module_name: str, batch: dict[str, Any],
+                      cache) -> tuple[Any, Any]:
+        """Batch-1 prefill on the decoder's pinned host; returns
+        (last-token logits, filled dense cache)."""
+        rt = self.decoder_runtime(module_name)
+        batch = {k: jax.device_put(v, rt.device) for k, v in batch.items()}
+        return rt.prefill_jit(rt.params, batch, cache)
+
+    def apply_paged_decode(self, module_name: str, tokens, cache,
+                           block_tables, lengths) -> tuple[Any, Any]:
+        """One batched decode step over the paged KV cache.  The cache
+        argument is donated — callers must rebind to the returned cache
+        and never reuse the old reference."""
+        rt = self.decoder_runtime(module_name)
+        if rt.paged_decode_jit is None:
+            raise NotImplementedError(
+                f"decoder {module_name!r} (family "
+                f"{rt.bundle.cfg.family!r}) has no paged decode path")
+        return rt.paged_decode_jit(rt.params, tokens, cache,
+                                   block_tables, lengths)
+
+    def generate(self, request) -> InferenceResult:
+        """Solo generative inference: encoders run as in ``infer()``;
+        the head prefills a batch-1 dense cache and decodes
+        sequentially.  This is the single-sequence oracle the batched
+        paged decode streams are compared against."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.serving.sampler import select_token
+
+        model = self.registry.models[request.model]
+        if request.prompt is None:
+            raise ValueError(
+                f"request {request.rid} targets generative model "
+                f"{request.model!r} but has no prompt")
+        rt = self.decoder_runtime(model.head.name)
+        t_start = time.perf_counter()
+        timeline = []
+        devices = {}
+        # head-only models may carry precomputed modality features as
+        # inputs (e.g. image embeds for a VLM without a deployed vision
+        # encoder); live encoders overwrite their modality below
+        enc_outputs: dict[str, Any] = dict(request.inputs or {})
+        for enc in model.encoders:
+            t0 = time.perf_counter()
+            out, used = self.apply_module(enc.name, request.inputs[enc.modality])
+            out = jax.block_until_ready(out)
+            timeline.append((enc.name, "encode", t0, time.perf_counter()))
+            enc_outputs[enc.modality] = out
+            if used:
+                devices[enc.name] = used
+        if rt.host:
+            devices[model.head.name] = rt.host
+
+        prompt = list(request.prompt)
+        max_new = max(int(request.max_new_tokens), 1)
+        total = rt.n_prefix + len(prompt) + max_new + 1
+        T = -(-total // 8) * 8
+        cache = rt.bundle.init_cache(1, T, jnp.float32)
+        t0 = time.perf_counter()
+        logits, cache = self.apply_prefill(
+            model.head.name, self.gen_batch(prompt, enc_outputs), cache)
+        timeline.append((model.head.name, "prefill", t0, time.perf_counter()))
+
+        rng = jax.random.PRNGKey((request.rid or 0) & 0x7FFFFFFF)
+        rng, k = jax.random.split(rng)
+        toks = [int(select_token(logits[0], k,
+                                 temperature=request.temperature))]
+        L = rt.n_prefix + len(prompt)
+        t0 = time.perf_counter()
+        while (len(toks) < max_new and toks[-1] != request.eos_id
+               and L < T - 1):
+            logits, cache = rt.decode_jit(
+                rt.params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+                jnp.asarray([L], jnp.int32))
+            L += 1
+            rng, k = jax.random.split(rng)
+            toks.append(int(select_token(logits[0], k,
+                                         temperature=request.temperature)))
+        timeline.append((model.head.name, "decode", t0, time.perf_counter()))
+        return InferenceResult(
+            model=request.model, output=np.asarray(toks, np.int32),
+            encoder_outputs=enc_outputs, timeline=timeline,
+            latency_s=time.perf_counter() - t_start, devices=devices,
+            rid=request.rid)
+
     # -- inference ------------------------------------------------------
     def infer(self, model_name: str, inputs: dict[str, Any],
               head_extra: dict | None = None,
@@ -225,6 +389,11 @@ class S2M3Engine:
         """inputs: modality -> array for each encoder; head receives the
         dict of encoder outputs (by modality) plus head_extra kwargs."""
         model = self.registry.models[model_name]
+        if model.head.name in self.decoders:
+            raise ValueError(
+                f"model {model_name!r} has a generative head; use "
+                "generate(request) for solo inference or the serving "
+                "scheduler for batched decode")
         t_start = time.perf_counter()
         timeline = []
         devices = {m.name: rt.host for m in model.modules

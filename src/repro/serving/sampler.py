@@ -1,4 +1,13 @@
-"""Token samplers."""
+"""Token samplers.
+
+The dispatch between greedy and stochastic sampling is *explicit*:
+``greedy`` takes no rng (it used to accept-and-ignore one), ``sample``
+*requires* one and rejects ``temperature <= 0`` (it used to silently
+drop the caller's rng and go greedy).  ``select_token`` is the serving
+entry point: temperature is a static Python float, so the dispatch is
+resolved at trace time and both branches are deterministic under jit —
+the same (rng, temperature) always yields the same token.
+"""
 
 from __future__ import annotations
 
@@ -6,16 +15,32 @@ import jax
 import jax.numpy as jnp
 
 
-def greedy(logits, rng=None):
+def greedy(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
 def sample(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
     if temperature <= 0.0:
-        return greedy(logits)
+        raise ValueError(
+            "sample() requires temperature > 0; use greedy() (or "
+            "select_token(), which dispatches explicitly) for "
+            "deterministic decoding")
+    if rng is None:
+        raise ValueError("sample() requires an rng key")
     logits = logits / temperature
     if top_k > 0:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[..., -1:]
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+def select_token(logits, rng=None, *, temperature: float = 0.0,
+                 top_k: int = 0):
+    """Explicit greedy/stochastic dispatch: ``temperature <= 0`` is
+    greedy (rng unused, may be None); otherwise ``rng`` is required.
+    ``temperature`` must be a static float — the branch is chosen at
+    trace time, never a traced conditional."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    return sample(logits, rng, temperature=temperature, top_k=top_k)

@@ -40,6 +40,16 @@ Architecture
   request-specific ``head_extra`` kwargs — stacking them would change
   semantics), but they still flow through module queues so the stats
   cover the whole pipeline.
+* **Generative heads stream through the paged-KV decode substrate.**
+  Models whose head is ``ModuleSpec.generative`` don't get a head
+  stage: once their encoder stages finish, the request enters the
+  head's ``DecodeStream`` (serving.decode) — admission against the page
+  pool, batch-1 prefill, then continuous batched decoding where every
+  live sequence (across tasks) shares one ``paged_decode_attention``
+  launch per step.  The stream's depth participates in the same
+  backpressure and deepest-queue servicing as encoder queues, and its
+  launches charge the decoder host's occupancy map so ``queue_aware``
+  routing sees decode traffic too.
 
 Batching model vs. the paper's footnote-4 fit
 =============================================
@@ -69,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.routing import QueueSnapshot, Request, batch_factor
+from repro.serving.decode import DecodeStream
 from repro.serving.engine import InferenceResult, S2M3Engine
 
 
@@ -82,12 +93,26 @@ class SchedulerConfig:
     max_batch: int = 8            # stages per formed module batch
     max_queue_depth: int = 32     # per-module admission limit
     admission: str = "block"      # "block" (drain) | "reject" (QueueFull)
+    # paged-KV decode substrate (per generative head module)
+    decode_rows: int = 4          # concurrent sequences per decode batch
+    decode_pages: int = 64        # KV page pool size (incl. 1 dummy page)
+    page_size: int = 16           # tokens per KV page
+    max_seq_len: int = 256        # prefix + prompt + max_new_tokens cap
 
     def __post_init__(self):
         if self.max_batch < 1 or self.max_queue_depth < 1:
             raise ValueError("max_batch and max_queue_depth must be >= 1")
         if self.admission not in ("block", "reject"):
             raise ValueError(f"unknown admission mode {self.admission!r}")
+        if self.decode_rows < 1 or self.page_size < 1 or self.max_seq_len < 1:
+            raise ValueError(
+                "decode_rows, page_size and max_seq_len must be >= 1")
+        n_max = -(-self.max_seq_len // self.page_size)
+        if self.decode_pages < n_max + 1:
+            raise ValueError(
+                f"decode_pages={self.decode_pages} cannot hold one "
+                f"max_seq_len={self.max_seq_len} sequence ({n_max} pages) "
+                "plus the dummy page")
 
 
 @dataclass
@@ -140,10 +165,15 @@ class ServeScheduler:
     """Continuous-batching core over a live ``S2M3Engine``."""
 
     def __init__(self, engine: S2M3Engine, *,
-                 config: SchedulerConfig | None = None):
+                 config: SchedulerConfig | None = None, on_finish=None):
         self.engine = engine
         self.cfg = config or SchedulerConfig()
+        # streaming hook: called with each InferenceResult as its
+        # sequence finishes (generative requests finish out of admission
+        # order — shorter decodes stream back first)
+        self.on_finish = on_finish
         self.queues: dict[str, deque[_Stage]] = {}
+        self.decode: dict[str, DecodeStream] = {}
         self.stats: dict[str, ModuleStats] = {}
         self.inflight: dict[int, _InFlight] = {}
         self.results: dict[int, InferenceResult] = {}
@@ -172,32 +202,58 @@ class ServeScheduler:
 
     def queue_depths(self) -> dict[str, int]:
         with self._lock:
-            return {m: len(q) for m, q in self.queues.items() if q}
+            depths = {m: len(q) for m, q in self.queues.items() if q}
+            streams = dict(self.decode)
+        for m, stream in streams.items():
+            d = stream.depth()
+            if d:
+                depths[m] = depths.get(m, 0) + d
+        return depths
 
     def stats_dict(self) -> dict[str, dict[str, Any]]:
         """Stable-schema stats: one row per deployed module (plus any
         queue that ever formed), all counter keys present and zeroed
-        even before the first ``serve()``/``step()``."""
+        even before the first ``serve()``/``step()``.  Generative head
+        rows additionally carry the decode-substrate counters and
+        page-occupancy keys from their ``DecodeStream``."""
         with self._lock:
             names = set(self.stats) | set(self.engine.registry.modules)
-            return {m: self.stats.get(m, ModuleStats(m)).as_dict()
+            rows = {m: self.stats.get(m, ModuleStats(m)).as_dict()
                     for m in sorted(names)}
+            streams = dict(self.decode)
+        for m, stream in streams.items():
+            rows.setdefault(m, ModuleStats(m).as_dict())
+            rows[m].update(stream.stats_dict())
+        return rows
 
     @property
     def cross_task_batches(self) -> int:
         return sum(st.cross_task_batches for st in self.stats.values())
 
+    @property
+    def cross_task_decode_batches(self) -> int:
+        """Batched decode steps whose live rows spanned >= 2 models —
+        the generative analogue of ``cross_task_batches``."""
+        with self._lock:
+            streams = dict(self.decode)
+        return sum(s.cross_task_decode_batches for s in streams.values())
+
     # -- admission ------------------------------------------------------
     def submit(self, request: Request) -> None:
         """Admit one request: split into per-module stages and enqueue,
-        applying backpressure when a target queue is at depth."""
+        applying backpressure when a target queue is at depth.
+        Generative models skip the head queue — after their encoders
+        finish they enter the head's paged decode stream instead."""
         model = self.engine.registry.models[request.model]
         if model.encoders and request.inputs is None:
             raise ValueError(
                 f"request {request.rid} has no inputs payload; serving "
                 "needs Request(inputs={modality: array})")
-        targets = ([m.name for m in model.encoders]
-                   if model.encoders else [model.head.name])
+        stream = None
+        if model.head.generative:
+            stream = self._ensure_stream(model.head.name)
+            stream.validate(request)      # fail fast, before encoder admit
+        targets = [m.name for m in model.encoders] + [model.head.name]
         for t in targets:
             while self._at_depth(t):
                 if self.cfg.admission == "reject":
@@ -214,13 +270,33 @@ class ServeScheduler:
             for enc in model.encoders:
                 self._enqueue(_Stage(request.rid, enc.name, request,
                                      x=request.inputs[enc.modality]))
+        elif stream is not None:
+            # head-only generative: any inputs payload carries
+            # precomputed modality features (e.g. VLM image embeds)
+            stream.submit(request.rid, request, dict(request.inputs or {}))
         else:
             self._enqueue(_Stage(request.rid, model.head.name, request))
 
+    def _ensure_stream(self, module: str) -> DecodeStream:
+        with self._lock:
+            stream = self.decode.get(module)
+        if stream is None:
+            # paged-cache allocation is device work: build outside the lock
+            stream = DecodeStream(
+                self.engine, module, rows=self.cfg.decode_rows,
+                n_pages=self.cfg.decode_pages, page_size=self.cfg.page_size,
+                max_seq_len=self.cfg.max_seq_len, now=self._now)
+            with self._lock:
+                stream = self.decode.setdefault(module, stream)
+        return stream
+
     def _at_depth(self, module: str) -> bool:
         with self._lock:
-            return (len(self.queues.get(module, ()))
-                    >= self.cfg.max_queue_depth)
+            depth = len(self.queues.get(module, ()))
+            stream = self.decode.get(module)
+        if stream is not None:
+            depth += stream.depth()
+        return depth >= self.cfg.max_queue_depth
 
     def _enqueue(self, stage: _Stage) -> None:
         with self._lock:
@@ -233,10 +309,16 @@ class ServeScheduler:
     # -- scheduling -----------------------------------------------------
     def step(self) -> bool:
         """Service the deepest non-empty queue (most coalescing
-        opportunity); returns False when there is nothing to do."""
+        opportunity); decode streams compete on waiting + live depth.
+        Returns False when there is nothing to do."""
         with self._lock:
-            module = max((m for m, q in self.queues.items() if q),
-                         key=lambda m: len(self.queues[m]), default=None)
+            depths = {m: len(q) for m, q in self.queues.items() if q}
+            streams = dict(self.decode)
+        for m, stream in streams.items():
+            d = stream.depth()
+            if d:
+                depths[m] = depths.get(m, 0) + d
+        module = max(depths, key=lambda m: depths[m], default=None)
         if module is None:
             return False
         self._service(module)
@@ -257,6 +339,11 @@ class ServeScheduler:
 
     # -- execution ------------------------------------------------------
     def _service(self, module: str) -> None:
+        with self._lock:
+            stream = self.decode.get(module)
+        if stream is not None:
+            self._service_decode(module, stream)
+            return
         spec = self.engine.registry.modules.get(module)
         is_encoder = spec is not None and spec.kind == "encoder"
         # form the batch under the lock; dispatch outside it
@@ -349,9 +436,38 @@ class ServeScheduler:
             fl.timeline.append((module, "encode", t0, t1))
             fl.pending.discard(module)
             if not fl.pending:
-                head_name = self.engine.registry.models[
-                    s.request.model].head.name
-                self._enqueue(_Stage(s.rid, head_name, s.request))
+                head = self.engine.registry.models[s.request.model].head
+                if head.generative:
+                    stream = self._ensure_stream(head.name)
+                    stream.submit(s.rid, s.request, dict(fl.enc_outputs))
+                else:
+                    self._enqueue(_Stage(s.rid, head.name, s.request))
+
+    def _service_decode(self, module: str, stream: DecodeStream) -> None:
+        """One decode-stream service round: admissions + one batched
+        decode step, then results for the sequences that finished."""
+        report = stream.tick()
+        host = self.engine.decoder_runtime(module).host
+        if report.decode_batch:
+            self._charge(module, host, report.decode_batch, self._now())
+        for seq in report.finished:
+            with self._lock:
+                fl = self.inflight.pop(seq.rid)
+            fl.timeline.extend(seq.timeline)
+            if host:
+                fl.devices[module] = host
+            enc = {k: jax.block_until_ready(v)
+                   for k, v in fl.enc_outputs.items()}
+            result = InferenceResult(
+                model=seq.request.model,
+                output=np.asarray(seq.tokens, np.int32),
+                encoder_outputs=enc, timeline=fl.timeline,
+                latency_s=self._now() - fl.t_admit, devices=fl.devices,
+                rid=seq.rid)
+            with self._lock:
+                self.results[seq.rid] = result
+            if self.on_finish is not None:
+                self.on_finish(result)
 
     def _run_head(self, module: str, stage: _Stage) -> None:
         with self._lock:
@@ -375,3 +491,27 @@ class ServeScheduler:
             latency_s=t1 - fl.t_admit, devices=fl.devices, rid=stage.rid)
         with self._lock:
             self.results[stage.rid] = result
+        if self.on_finish is not None:
+            self.on_finish(result)
+
+
+def lm_scheduler(bundle, params=None, *, config: SchedulerConfig | None = None,
+                 on_finish=None) -> ServeScheduler:
+    """Single-bundle convenience: wrap one LM ``ModelBundle`` as a
+    head-only generative model ("lm") on a bare engine and return a
+    ``ServeScheduler`` serving it through the paged decode substrate.
+    Submit ``Request(model="lm", prompt=..., ...)``; precomputed
+    modality features (VLM image embeds) go in ``inputs``."""
+    import jax
+
+    from repro.core.module import ModelSpec, ModuleSpec
+
+    name = getattr(bundle.cfg, "name", "lm-head")
+    head = ModuleSpec(name, "head", "task", bundle.param_count(),
+                      generative=True)
+    model = ModelSpec("lm", "generation", (), head)
+    engine = S2M3Engine()
+    if params is None:
+        params = bundle.init(jax.random.PRNGKey(0))
+    engine.deploy_model(model, {name: (lambda: (bundle, params))})
+    return ServeScheduler(engine, config=config, on_finish=on_finish)

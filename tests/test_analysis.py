@@ -351,6 +351,99 @@ def test_serving_layer_lints_clean():
     assert errors(diags) == [], format_report(diags)
 
 
+def test_lint_unlocked_allocator_call():
+    """Allocator mutation paths (pool.alloc/extend/free, rows.release)
+    outside the lock are ERRORs in lock-bearing classes."""
+    src = _LOCKED_CLASS.format(
+        body="bad(self, rid):\n        self.pool.free(rid)")
+    hits = [d for d in lint_source(src, "sched.py")
+            if d.code == "concurrency/unlocked-allocator-call"]
+    assert len(hits) == 1 and hits[0].severity == Severity.ERROR
+    assert "free" in hits[0].message
+
+
+def test_lint_allocator_call_under_lock_ok():
+    src = _LOCKED_CLASS.format(
+        body="ok(self, rid):\n        with self._lock:\n"
+             "            self.pool.extend(rid, 4)")
+    assert not [d for d in lint_source(src, "s.py")
+                if d.code == "concurrency/unlocked-allocator-call"]
+
+
+def test_lint_allocator_call_in_init_exempt():
+    # __init__ runs before the object is shared; no lock required
+    src = '''
+import threading
+class Stream:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pool = object()
+        self.pool.alloc("dummy", 1)
+    def tick(self):
+        with self._lock:
+            self.pool.alloc("x", 1)
+'''
+    assert not [d for d in lint_source(src, "s.py")
+                if d.code == "concurrency/unlocked-allocator-call"]
+
+
+def test_lint_allocator_rule_needs_a_lock():
+    # classes with no lock attr declare no discipline -> not flagged
+    src = '''
+class Free:
+    def go(self):
+        self.pool.alloc("x", 1)
+'''
+    assert not [d for d in lint_source(src, "s.py")
+                if d.code == "concurrency/unlocked-allocator-call"]
+
+
+# ---- paged-KV page budget ------------------------------------------------
+
+def _gen_dep(kv_bytes, cap=1 * GB):
+    head = ModuleSpec("lm-head", "head", "task", 1_000, generative=True,
+                      kv_bytes_per_token=kv_bytes)
+    model = ModelSpec("chat", "chat", (), head)
+    dep = (Deployment(_cluster(n=1, cap=cap))
+           .add_model(model, {"lm-head": lambda: (lambda p, e: p,
+                                                  jnp.float32(0.0))})
+           .plan("greedy"))
+    return dep
+
+
+def test_page_budget_overflow_is_error():
+    from repro.analysis.plan_check import check_page_budget
+
+    dep = _gen_dep(kv_bytes=1 * MB, cap=1 * GB)
+    diags = check_page_budget(dep.placement, dep.cluster, dep.models,
+                              decode_pages=64, page_size=16)
+    errs = errors(diags)
+    assert "plan/page-budget" in _codes(errs)     # 1 GiB pool vs 1 GiB cap
+    assert any(d.entity == "lm-head" for d in errs)
+    # a pool that fits is clean
+    assert not check_page_budget(dep.placement, dep.cluster, dep.models,
+                                 decode_pages=4, page_size=16)
+
+
+def test_page_budget_unspecified_kv_is_warning():
+    from repro.analysis.plan_check import check_page_budget
+
+    dep = _gen_dep(kv_bytes=0)
+    diags = check_page_budget(dep.placement, dep.cluster, dep.models,
+                              decode_pages=64, page_size=16)
+    assert errors(diags) == []
+    assert "plan/kv-unspecified" in _codes(diags)
+
+
+def test_serve_preflight_rejects_oversized_page_pool():
+    dep = _gen_dep(kv_bytes=1 * MB, cap=1 * GB)
+    diags = verify_deployment(dep, decode_pages=64, page_size=16)
+    assert "plan/page-budget" in _codes(errors(diags))
+    dep.materialize()
+    with pytest.raises(PlanError, match="page-budget"):
+        dep.serve([], decode_pages=64, page_size=16)
+
+
 # ---- CLI ----------------------------------------------------------------
 
 @pytest.mark.analysis

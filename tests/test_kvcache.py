@@ -1,0 +1,167 @@
+"""Paged KV allocation: PagePool lifecycle (alloc/extend/free), the
+double-free guards on both allocators, LIFO page reuse, fragmentation
+accounting, block-table views, and the cache scatter helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import (
+    PagePool, PagesExhausted, SlotPool, insert_pages,
+)
+
+
+# ---- SlotPool ------------------------------------------------------------
+
+def test_slotpool_alloc_release_cycle():
+    pool = SlotPool(2)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1}
+    assert pool.alloc() is None          # exhausted -> None, not a raise
+    assert pool.n_live == 2
+    pool.release(a)
+    assert pool.n_live == 1
+    assert pool.alloc() == a             # LIFO reuse of the freed row
+
+
+def test_slotpool_double_free_raises():
+    pool = SlotPool(2)
+    s = pool.alloc()
+    pool.release(s)
+    with pytest.raises(ValueError, match="double"):
+        pool.release(s)
+    with pytest.raises(ValueError, match="not live"):
+        pool.release(1)                  # never allocated
+
+
+# ---- PagePool lifecycle --------------------------------------------------
+
+def test_pagepool_alloc_rounds_up_to_pages():
+    pool = PagePool(8, page_size=4)
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    pages = pool.alloc("a", 9)           # 9 tokens -> 3 pages of 4
+    assert len(pages) == 3
+    assert pool.n_live_pages == 3 and pool.n_free == 5
+    assert pool.used_tokens["a"] == 9
+
+
+def test_pagepool_zero_token_alloc_still_owns_a_page():
+    pool = PagePool(4, page_size=4)
+    assert len(pool.alloc("a", 0)) == 1  # block table is never empty
+
+
+def test_pagepool_extend_crosses_page_boundary():
+    pool = PagePool(8, page_size=4)
+    pool.alloc("a", 3)
+    assert pool.extend("a", 4) == []     # tail page still has room
+    added = pool.extend("a", 5)          # crosses into page 2
+    assert len(added) == 1
+    assert pool.block_table("a") != [] and len(pool.block_table("a")) == 2
+    assert pool.used_tokens["a"] == 5
+    # extend never shrinks the used count
+    pool.extend("a", 2)
+    assert pool.used_tokens["a"] == 5
+
+
+def test_pagepool_alloc_twice_same_seq_raises():
+    pool = PagePool(4, page_size=4)
+    pool.alloc("a", 1)
+    with pytest.raises(ValueError, match="already live"):
+        pool.alloc("a", 1)
+
+
+def test_pagepool_double_free_raises():
+    pool = PagePool(4, page_size=4)
+    pool.alloc("a", 1)
+    pool.free("a")
+    with pytest.raises(ValueError, match="double"):
+        pool.free("a")
+    with pytest.raises(ValueError, match="not live"):
+        pool.free("never-seen")
+
+
+def test_pagepool_exhaustion_raises_and_leaves_pool_intact():
+    pool = PagePool(3, page_size=4)
+    pool.alloc("a", 8)                   # 2 pages
+    with pytest.raises(PagesExhausted, match="need 2 pages"):
+        pool.alloc("b", 5)               # would need 2, only 1 free
+    assert pool.n_free == 1              # failed alloc claimed nothing
+    pool.alloc("b", 4)                   # 1 page still fits
+    with pytest.raises(PagesExhausted):
+        pool.extend("b", 5)
+    assert not pool.can_alloc(1)
+
+
+def test_pagepool_lifo_reuse_after_free():
+    """Freed pages are recycled hottest-first: a new sequence gets the
+    pages the dead one just released, in the same order."""
+    pool = PagePool(8, page_size=4)
+    a_pages = pool.alloc("a", 12)
+    pool.alloc("b", 4)
+    pool.free("a")
+    c_pages = pool.alloc("c", 12)
+    assert c_pages == a_pages
+
+
+def test_pagepool_fragmentation_accounting():
+    pool = PagePool(8, page_size=4)
+    pool.alloc("a", 5)                   # 2 pages, 5/8 tokens used
+    pool.alloc("b", 4)                   # 1 page, full
+    frag = pool.fragmentation()
+    assert frag["pages_live"] == 3
+    assert frag["tokens_capacity"] == 12
+    assert frag["tokens_used"] == 9
+    assert frag["slack_tokens"] == 3
+    assert frag["internal_frag"] == pytest.approx(1 - 9 / 12, abs=1e-4)
+    assert frag["pages_peak"] == 3
+    pool.free("a")
+    assert pool.fragmentation()["pages_peak"] == 3   # peak is sticky
+    empty = PagePool(4, page_size=4).fragmentation()
+    assert empty["internal_frag"] == 0.0
+
+
+# ---- block-table views ---------------------------------------------------
+
+def test_table_array_pads_and_guards_overflow():
+    pool = PagePool(8, page_size=4)
+    pool.alloc("a", 8)                   # 2 pages
+    pool.alloc("b", 1)                   # 1 page
+    arr = pool.table_array(["a", "b", "ghost"], n_max=3)
+    assert arr.shape == (3, 3) and arr.dtype == np.int32
+    assert list(arr[0, :2]) == pool.block_table("a")
+    assert arr[0, 2] == 0 and arr[1, 1] == 0         # padded
+    assert (arr[2] == 0).all()                       # unknown seq -> zeros
+    with pytest.raises(ValueError, match="n_max"):
+        pool.table_array(["a"], n_max=1)
+
+
+def test_block_table_is_a_copy():
+    pool = PagePool(4, page_size=4)
+    pool.alloc("a", 4)
+    view = pool.block_table("a")
+    view.append(99)
+    assert pool.block_table("a") != view
+
+
+# ---- cache scatter helpers -----------------------------------------------
+
+def test_insert_pages_scatters_dense_prefill_into_pool():
+    layers, n_pages, ps, heads, dim = 2, 6, 4, 2, 3
+    paged = {"k": jnp.zeros((layers, n_pages, ps, heads, dim))}
+    T = 8
+    dense = {"k": jnp.arange(layers * T * heads * dim, dtype=jnp.float32)
+                  .reshape(layers, 1, T, heads, dim)}
+    pages = [4, 1]                       # deliberately non-contiguous
+    out = insert_pages(paged, dense, pages, n_tokens=T)
+    got = np.asarray(out["k"])
+    want = np.asarray(dense["k"][:, 0])
+    for j, pid in enumerate(pages):
+        np.testing.assert_array_equal(got[:, pid],
+                                      want[:, j * ps:(j + 1) * ps])
+    # untouched pages stay zero
+    for pid in set(range(n_pages)) - set(pages):
+        assert (got[:, pid] == 0).all()

@@ -1,5 +1,5 @@
-"""Serving: continuous batching == sequential generation; slot reuse;
-S2M3 engine split/share semantics with real computation."""
+"""Serving: paged continuous batching == sequential generation; page
+and row reuse; S2M3 engine split/share semantics with real computation."""
 
 from functools import partial
 
@@ -11,14 +11,15 @@ import pytest
 from repro.common.config import get_config
 from repro.configs.s2m3_zoo import get_clip_config
 from repro.core.module import ModelSpec, ModuleSpec
+from repro.core.routing import Request
 from repro.models import clip as C
 from repro.models.api import build_model
 from repro.serving.engine import S2M3Engine
-from repro.serving.generator import GenRequest, LMServer
+from repro.serving.scheduler import SchedulerConfig, lm_scheduler
 
 
 def _reference_generate(bundle, params, prompt, n_new, cache_len=64):
-    """Sequential greedy decoding oracle."""
+    """Sequential greedy decoding oracle (dense contiguous cache)."""
     cache = bundle.init_cache(1, cache_len, dtype=jnp.float32)
     logits, cache = jax.jit(bundle.prefill)(
         params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cache)
@@ -33,32 +34,80 @@ def _reference_generate(bundle, params, prompt, n_new, cache_len=64):
     return out
 
 
-def test_continuous_batching_matches_sequential():
+@pytest.fixture(scope="module")
+def tinyllama():
     cfg = get_config("tinyllama-1.1b", smoke=True)
     bundle = build_model(cfg, compute_dtype=jnp.float32)
     params = bundle.init(jax.random.PRNGKey(0))
-    server = LMServer(bundle, max_batch=3, cache_len=64, params=params)
+    return cfg, bundle, params
+
+
+def test_continuous_batching_matches_sequential(tinyllama):
+    cfg, bundle, params = tinyllama
+    sched = lm_scheduler(bundle, params, config=SchedulerConfig(
+        decode_rows=3, page_size=8, max_seq_len=64, decode_pages=25))
 
     prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12]]
-    for i, p in enumerate(prompts):
-        server.submit(GenRequest(rid=i, prompt=p, max_new_tokens=6))
-    finished = server.run()
-    assert len(finished) == len(prompts)
+    reqs = [Request(rid=i, model="lm", source="dev0", prompt=tuple(p),
+                    max_new_tokens=6) for i, p in enumerate(prompts)]
+    results = sched.serve(reqs)
+    assert len(results) == len(prompts)
 
-    for req in finished:
-        expect = _reference_generate(bundle, params, req.prompt, 6)
-        assert req.output == expect, (req.rid, req.output, expect)
+    for req, res in zip(reqs, results):
+        expect = _reference_generate(bundle, params, list(req.prompt), 6)
+        assert list(res.output) == expect, (req.rid, list(res.output), expect)
 
 
-def test_slot_reuse_under_pressure():
-    cfg = get_config("tinyllama-1.1b", smoke=True)
+def test_row_and_page_reuse_under_pressure(tinyllama):
+    cfg, bundle, params = tinyllama
+    # 2 rows, pool sized for barely 2 worst-case sequences: the 5
+    # requests must recycle rows AND pages to finish
+    sched = lm_scheduler(bundle, params, config=SchedulerConfig(
+        decode_rows=2, page_size=8, max_seq_len=32, decode_pages=9))
+    reqs = [Request(rid=i, model="lm", source="dev0", prompt=(i + 1,),
+                    max_new_tokens=4) for i in range(5)]
+    results = sched.serve(reqs)
+    assert len(results) == 5
+    assert all(len(r.output) == 4 for r in results)
+    stream = sched.decode[cfg.name]
+    assert stream.rows.n_live == 0
+    assert stream.pool.n_seqs == 1            # only the dummy page owner
+    assert stream.pool.n_live_pages == 1
+    st = sched.stats_dict()[cfg.name]
+    assert st["decode_tokens"] == 15          # 5 req * (4 - 1 prefill tok)
+    assert st["pages_peak"] >= 3
+
+
+def test_generative_results_stream_as_they_finish(tinyllama):
+    cfg, bundle, params = tinyllama
+    order = []
+    sched = lm_scheduler(bundle, params,
+                         on_finish=lambda r: order.append(r.rid),
+                         config=SchedulerConfig(
+                             decode_rows=4, page_size=8, max_seq_len=64,
+                             decode_pages=33))
+    reqs = [Request(rid=i, model="lm", source="dev0", prompt=(1, 2),
+                    max_new_tokens=n) for i, n in enumerate((9, 2, 5))]
+    sched.serve(reqs)
+    # shorter decodes finish (and stream) first, not in admission order
+    assert order == [1, 2, 0]
+
+
+def test_vlm_captioning_through_scheduler():
+    cfg = get_config("internvl2-1b", smoke=True)
     bundle = build_model(cfg, compute_dtype=jnp.float32)
-    server = LMServer(bundle, max_batch=2, cache_len=32)
-    for i in range(5):     # more requests than slots
-        server.submit(GenRequest(rid=i, prompt=[i + 1], max_new_tokens=4))
-    finished = server.run()
-    assert len(finished) == 5
-    assert server.pool.n_live == 0
+    params = bundle.init(jax.random.PRNGKey(0))
+    sched = lm_scheduler(bundle, params, config=SchedulerConfig(
+        decode_rows=2, page_size=8, max_seq_len=64, decode_pages=17))
+    img = 0.1 * np.random.default_rng(0).standard_normal(
+        (cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+    reqs = [Request(rid=0, model="lm", source="dev0", prompt=(1, 2, 3),
+                    max_new_tokens=4, inputs={"vision": img})]
+    results = sched.serve(reqs)
+    assert len(results) == 1 and len(results[0].output) == 4
+    # solo oracle over the same engine: identical tokens
+    solo = sched.engine.generate(reqs[0])
+    assert list(results[0].output) == list(solo.output)
 
 
 def test_engine_split_equals_monolithic():
@@ -112,15 +161,3 @@ def test_engine_shares_modules_across_tasks():
     assert "mini-vit" not in freed        # still used by classify
     freed = engine.evict_model("classify")
     assert "mini-vit" in freed
-
-
-def test_vlm_server_with_image_stub():
-    cfg = get_config("internvl2-1b", smoke=True)
-    bundle = build_model(cfg, compute_dtype=jnp.float32)
-    server = LMServer(bundle, max_batch=2, cache_len=64)
-    img = 0.1 * np.random.default_rng(0).standard_normal(
-        (cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
-    server.submit(GenRequest(rid=0, prompt=[1, 2, 3], max_new_tokens=4,
-                             extras={"image_embeds": img}))
-    finished = server.run()
-    assert len(finished) == 1 and len(finished[0].output) == 4
