@@ -14,6 +14,14 @@ for unnamed rows); the compared metrics are the latency-bearing keys
 Exit status 1 when any regression exceeds the threshold, so the diff
 can gate CI.  Lower is better for every compared metric; improvements
 and new/removed rows are reported but never fail the run.
+
+Snapshots carry a ``machine`` profile header (``machine_profile()``,
+stamped by ``benchmarks/run.py``): platform, python/jax versions, jax
+backend and device kind/count.  Wall-clock latencies are only
+comparable on the same machine, so the diff *refuses* cross-machine
+comparisons (exit 2) unless ``--ignore-machine`` is given; missing
+files, unreadable JSON, mismatched sections, and disjoint row sets also
+exit 2 with a one-line explanation instead of a traceback.
 """
 
 from __future__ import annotations
@@ -28,6 +36,46 @@ from pathlib import Path
 METRICS = ("p50_ms", "p99_ms", "us_per_call", "wall_s", "latency_s")
 
 DEFAULT_THRESHOLD = 1.20     # flag when new > old * threshold
+
+
+def machine_profile() -> dict:
+    """Where these wall-clocks were measured: enough to tell whether two
+    snapshots are comparable at all."""
+    import platform
+
+    prof = {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+
+        prof["jax"] = jax.__version__
+        prof["backend"] = jax.default_backend()
+        devs = jax.devices()
+        prof["device_kind"] = devs[0].device_kind if devs else "none"
+        prof["device_count"] = len(devs)
+    except Exception:                      # no jax / no backend: still a
+        prof["jax"] = "unavailable"        # usable (cpu-side) profile
+    return prof
+
+
+def profile_mismatches(old: dict | None, new: dict | None) -> list[str]:
+    """Human-readable differences between two machine profiles.  A
+    snapshot without a profile header is never comparable (regenerate it
+    with benchmarks/run.py)."""
+    if not old or not new:
+        which = ("both snapshots" if not old and not new
+                 else "baseline snapshot" if not old
+                 else "candidate snapshot")
+        return [f"{which} carry no machine profile header"]
+    out = []
+    for key in sorted(set(old) | set(new)):
+        ov, nv = old.get(key), new.get(key)
+        if ov != nv:
+            out.append(f"{key}: {ov!r} vs {nv!r}")
+    return out
 
 
 @dataclass(frozen=True)
@@ -88,21 +136,64 @@ def diff_snapshots(old: dict, new: dict, *,
     return regressions, notes
 
 
+def _load_snapshot(path: Path, role: str) -> dict | None:
+    """Read one snapshot, reporting problems as one-line messages
+    (never a traceback): missing file, unreadable JSON, wrong shape."""
+    if not path.exists():
+        print(f"error: {role} snapshot {path} does not exist "
+              "(run benchmarks/run.py to produce it)")
+        return None
+    try:
+        snap = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {role} snapshot {path} is not readable JSON: {e}")
+        return None
+    if not isinstance(snap, dict) or not isinstance(snap.get("rows", []),
+                                                    list):
+        print(f"error: {role} snapshot {path} is not a BENCH_<section> "
+              "snapshot (expected an object with 'section' and 'rows')")
+        return None
+    return snap
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="diff two BENCH_<section>.json snapshots; exit 1 on "
-                    "latency regressions beyond --threshold")
+                    "latency regressions beyond --threshold, 2 when the "
+                    "snapshots are not comparable")
     ap.add_argument("old", type=Path, help="baseline snapshot")
     ap.add_argument("new", type=Path, help="candidate snapshot")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="regression ratio (default %(default)s = +20%%)")
+    ap.add_argument("--ignore-machine", action="store_true",
+                    help="compare even when the machine profile headers "
+                         "differ (wall-clock ratios will be meaningless)")
     args = ap.parse_args(argv)
 
-    old = json.loads(args.old.read_text())
-    new = json.loads(args.new.read_text())
+    old = _load_snapshot(args.old, "baseline")
+    new = _load_snapshot(args.new, "candidate")
+    if old is None or new is None:
+        return 2
     if old.get("section") != new.get("section"):
-        print(f"note: comparing different sections "
-              f"{old.get('section')!r} vs {new.get('section')!r}")
+        print(f"error: section mismatch: {args.old} is "
+              f"{old.get('section')!r} but {args.new} is "
+              f"{new.get('section')!r} — compare like with like")
+        return 2
+    mismatches = profile_mismatches(old.get("machine"), new.get("machine"))
+    if mismatches:
+        for m in mismatches:
+            print(f"machine profile: {m}")
+        if not args.ignore_machine:
+            print("refusing cross-machine comparison: wall-clock "
+                  "latencies are only comparable on the machine that "
+                  "recorded the baseline (re-run benchmarks/run.py here, "
+                  "or pass --ignore-machine)")
+            return 2
+    if old.get("rows") and new.get("rows") \
+            and not (_rows_by_name(old).keys() & _rows_by_name(new).keys()):
+        print("error: the snapshots share no row names — nothing to "
+              "compare")
+        return 2
     regressions, notes = diff_snapshots(old, new,
                                         threshold=args.threshold)
     for note in notes:

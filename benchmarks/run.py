@@ -24,8 +24,13 @@ def _emit(name: str, us, derived):
 
 
 def _snapshot(section: str, rows, error: str | None = None) -> None:
+    from benchmarks.diff import machine_profile
+
     path = SNAPSHOT_DIR / f"BENCH_{section}.json"
-    payload = {"section": section, "rows": rows}
+    # the machine header lets diff.py refuse cross-machine comparisons:
+    # wall-clocks only mean something against a baseline from this box
+    payload = {"section": section, "machine": machine_profile(),
+               "rows": rows}
     if error is not None:
         payload["error"] = error
     path.write_text(json.dumps(payload, indent=2, default=str) + "\n")

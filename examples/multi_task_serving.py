@@ -6,6 +6,9 @@ with a tiny LM head), plan a greedy placement over 8 logical devices,
 materialize on real jax devices, then drive the SAME ``Request`` objects
 through the latency simulator and the live engine — predicted routes and
 real routes line up, and the sharing ledger shows the dedup savings.
+The serve() pass then demonstrates the observability layer: per-task
+SLO-attainment summary, a Chrome-trace export of the request span trees
+(``multi_task_trace.json``), and a ``dep.compare()`` drift report.
 
     PYTHONPATH=src python examples/multi_task_serving.py
 """
@@ -134,7 +137,7 @@ def main():
     # ---- continuous batching: shared encoders share COMPUTE too ----
     # requests from all three tasks coalesce into one mini-vit batch
     burst = [Request(10 + i, ["retrieval", "classify", "vqa"][i % 3], "dev0",
-                     inputs=(workload[i % 3].inputs))
+                     inputs=(workload[i % 3].inputs), slo_deadline=2.0)
              for i in range(9)]
     served = dep.serve(burst, max_batch=8)
     print(f"\nserve(): {len(served)} requests drained through the "
@@ -147,6 +150,23 @@ def main():
               f"cross_task={st['cross_task_batches']}")
     same = jnp.max(jnp.abs(served[0].output - dep.submit(burst[0]).output))
     print(f"  batched-vs-solo max |diff|: {float(same):.2e}")
+
+    # ---- observability: SLO attainment, trace export, drift ----
+    from repro.obs import format_slo_summary, slo_summary
+
+    print("\nper-task latency / SLO attainment (2 s deadline):")
+    print(format_slo_summary(slo_summary(dep.scheduler)))
+
+    trace = dep.trace()
+    assert trace.validate() == [], "serve trace must be contiguous trees"
+    trace.save("multi_task_trace.json")
+    print(f"\nwrote {len(trace)} spans across {len(trace.rids())} request "
+          "tracks to multi_task_trace.json (open in chrome://tracing)")
+
+    # did serve() do what simulate() promised?  Same Requests, both paths.
+    drift = dep.compare(burst, max_batch=8)
+    print("\n" + drift.summary())
+    assert drift.n_route_divergences == 0, "sim routes == real devices"
 
     # ---- lifecycle: hot-remove a task, then a device ----
     freed = dep.evict("vqa")

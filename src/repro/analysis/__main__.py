@@ -2,6 +2,7 @@
 
     python -m repro.analysis --self              # CI mode: lint the repro
                                                  # package + kernel sweep
+                                                 # + obs self-test
                                                  # + bench regression gate
     python -m repro.analysis src/repro/serving   # lint specific paths
     python -m repro.analysis --kernels           # kernel checker only
@@ -40,7 +41,8 @@ def _bench_regressions(threshold: float):
     if str(root) not in sys.path:
         sys.path.insert(0, str(root))
     from benchmarks import kernels, serving
-    from benchmarks.diff import diff_snapshots
+    from benchmarks.diff import (diff_snapshots, machine_profile,
+                                 profile_mismatches)
 
     lines, failed = [], False
     for name, fn in (("kernels", kernels.run), ("serving", serving.run)):
@@ -48,6 +50,15 @@ def _bench_regressions(threshold: float):
         if not snap.exists():
             lines.append(f"bench gate [{name}]: {snap.name} missing, "
                          "section skipped (run benchmarks/run.py)")
+            continue
+        old = json.loads(snap.read_text())
+        mismatches = profile_mismatches(old.get("machine"),
+                                        machine_profile())
+        if mismatches:
+            lines.append(
+                f"bench gate [{name}]: snapshot recorded on a different "
+                f"machine ({'; '.join(mismatches)}), section skipped — "
+                "regenerate with benchmarks/run.py on this machine")
             continue
         try:
             new_rows = fn()
@@ -57,7 +68,7 @@ def _bench_regressions(threshold: float):
             failed = True
             continue
         regs, notes = diff_snapshots(
-            json.loads(snap.read_text()),
+            old,
             {"section": name, "rows": list(new_rows)},
             threshold=threshold)
         lines += [f"bench gate [{name}]: {r.format()}" for r in regs]
@@ -105,9 +116,11 @@ def main(argv: list[str] | None = None) -> int:
         import repro
 
         from repro.analysis.concurrency_lint import lint_paths
+        from repro.obs.selftest import self_test
 
         # repro may be a namespace package (__file__ is None): use __path__
         diags += lint_paths([Path(p) for p in repro.__path__])
+        diags += self_test()
     elif args.paths:
         from repro.analysis.concurrency_lint import lint_paths
 

@@ -22,7 +22,13 @@ draining consumer may touch from different threads.  The discipline is:
   on any self-rooted object — the page pool and row slots of a decode
   stream) must run under the lock: a free racing an alloc corrupts the
   free list and double-assigns pages —
-  ``concurrency/unlocked-allocator-call`` ERROR.
+  ``concurrency/unlocked-allocator-call`` ERROR;
+* metrics instruments (any class declaring
+  ``kind = "counter" | "gauge" | "histogram"`` — the ``obs.metrics``
+  contract) must mutate their state only under their lock, *every*
+  mutation, not just ones some other site happens to guard: instruments
+  are shared across scheduler threads by construction —
+  ``obs/unlocked-metric-mutation`` ERROR.
 
 Scope and honesty: this is a lint, not an escape analysis.  It tracks
 direct ``self.X`` mutations (assignment, augmented assignment, ``del``,
@@ -53,6 +59,20 @@ _DISPATCH_ROOTS = {"jax", "jnp"}
 _REGISTRY_MUTATORS = {"add_model", "remove_model", "deploy_model",
                       "evict_model"}
 _BATCH_ROOTS = {"step", "_service"}
+_INSTRUMENT_KINDS = {"counter", "gauge", "histogram"}
+
+
+def _instrument_kind(cls: ast.ClassDef) -> str | None:
+    """The ``kind = "counter"`` class constant that marks an
+    ``obs.metrics`` instrument class (None for everything else)."""
+    for node in cls.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                       ast.Constant):
+            for t in node.targets:
+                if (isinstance(t, ast.Name) and t.id == "kind"
+                        and node.value.value in _INSTRUMENT_KINDS):
+                    return node.value.value
+    return None
 
 
 def _self_attr(node) -> str | None:
@@ -298,6 +318,23 @@ def _lint_class(cls: ast.ClassDef, filename: str) -> list[Diagnostic]:
                 "scheduler and can deadlock re-entrant probes",
                 entity=loc(ln),
                 hint="form the batch under the lock, dispatch outside it"))
+
+    kind = _instrument_kind(cls)
+    if kind is not None:
+        # instruments are shared across threads by construction: every
+        # non-ctor mutation must hold the lock, whether or not any other
+        # site guards that attribute
+        for attr, meth, ln, locked in facts.mutations:
+            if locked or meth == "__init__" or attr in facts.lock_attrs:
+                continue
+            diags.append(Diagnostic(
+                Severity.ERROR, "obs/unlocked-metric-mutation",
+                f"{cls.name} is a {kind} instrument (kind={kind!r}) but "
+                f"{cls.name}.{meth} mutates self.{attr} outside the "
+                "lock; concurrent scheduler threads would lose updates",
+                entity=loc(ln),
+                hint="hold `with self._lock:` across every instrument "
+                     "mutation (see repro.obs.metrics)"))
 
     roots = _BATCH_ROOTS & facts.methods
     if roots:

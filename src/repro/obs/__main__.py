@@ -1,0 +1,132 @@
+"""CLI for the observability layer.
+
+    python -m repro.obs trace out.json      # serve a demo two-task
+                                            # workload, write the Chrome
+                                            # trace (open in Perfetto)
+    python -m repro.obs drift               # demo simulate-vs-serve
+                                            # drift report
+    python -m repro.obs --self-test         # span nesting + metrics
+                                            # thread-safety + instrument
+                                            # lint (CI gate; exit 1 on
+                                            # failure)
+
+The demo deployment is two tasks sharing one encoder — the smallest
+workload that exercises cross-task batch coalescing, so the exported
+trace shows the shared-encoder launches tagged with their batch
+composition.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _demo_deployment():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.cluster import ClusterSpec, DeviceSpec
+    from repro.core.module import ModelSpec, ModuleSpec
+    from repro.s2m3 import Deployment
+
+    D = 16
+    enc = ModuleSpec("demo-enc", "encoder", "vision", 4 * D * D,
+                     flops_per_query=2e5)
+    cls_head = ModuleSpec("demo-cls", "head", "task", 4 * D * 4,
+                          flops_per_query=1e4)
+    reg_head = ModuleSpec("demo-reg", "head", "task", 4 * D,
+                          flops_per_query=1e4)
+    w_enc = jax.random.normal(jax.random.PRNGKey(0), (D, D))
+    w_cls = jax.random.normal(jax.random.PRNGKey(1), (D, 4))
+    w_reg = jax.random.normal(jax.random.PRNGKey(2), (D, 1))
+    builders = {
+        "demo-enc": lambda: (lambda p, x: jnp.tanh(x @ p), w_enc),
+        "demo-cls": lambda: (lambda p, e: e["vision"] @ p, w_cls),
+        "demo-reg": lambda: (lambda p, e: e["vision"] @ p, w_reg),
+    }
+    cluster = ClusterSpec(devices=[
+        DeviceSpec(f"dev{i}", 1024**3, 1e9) for i in range(2)])
+    dep = (Deployment(cluster)
+           .add_model(ModelSpec("classify", "classification",
+                                (enc,), cls_head), builders)
+           .add_model(ModelSpec("score", "regression", (enc,), reg_head))
+           .plan("greedy", routing="paper")
+           .materialize())
+    return dep
+
+
+def _demo_workload(n: int):
+    import jax
+
+    from repro.s2m3 import Request
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16))
+    return [Request(i, "classify" if i % 2 == 0 else "score", "dev0",
+                    inputs={"vision": x}, slo_deadline=0.5)
+            for i in range(n)]
+
+
+def _cmd_trace(out: str, n: int) -> int:
+    dep = _demo_deployment()
+    dep.serve(_demo_workload(n))
+    trace = dep.trace()
+    problems = trace.validate()
+    trace.save(out)
+    print(f"served {n} demo request(s); wrote {len(trace)} span(s) "
+          f"to {out} (open in https://ui.perfetto.dev)")
+    for p in problems:
+        print(f"MALFORMED: {p}")
+    from repro.obs.summary import format_slo_summary, slo_summary
+
+    print(format_slo_summary(slo_summary(dep.scheduler)))
+    return 1 if problems else 0
+
+
+def _cmd_drift(n: int) -> int:
+    dep = _demo_deployment()
+    report = dep.compare(_demo_workload(n))
+    print(report.summary())
+    return 0
+
+
+def _cmd_self_test() -> int:
+    from repro.analysis.diagnostics import errors, format_report
+    from repro.obs.selftest import self_test
+
+    diags = self_test()
+    print(format_report(diags))
+    return 1 if errors(diags) else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="tracing / metrics / drift CLI for the S2M3 "
+                    "serving stack")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the obs self-test (span nesting, metrics "
+                         "thread-safety, instrument lint)")
+    sub = ap.add_subparsers(dest="cmd")
+    p_trace = sub.add_parser(
+        "trace", help="serve a demo workload and export its Chrome trace")
+    p_trace.add_argument("out", help="output JSON path")
+    p_trace.add_argument("-n", type=int, default=6,
+                         help="demo requests (default %(default)s)")
+    p_drift = sub.add_parser(
+        "drift", help="demo simulate-vs-serve drift report")
+    p_drift.add_argument("-n", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return _cmd_self_test()
+    if args.cmd == "trace":
+        return _cmd_trace(args.out, args.n)
+    if args.cmd == "drift":
+        return _cmd_drift(args.n)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.routing import Request
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serving.kvcache import PagePool, SlotPool, insert_pages
 from repro.serving.sampler import select_token
 
@@ -55,6 +57,9 @@ class _GenSeq:
     rng: Any = None
     done: bool = False
     timeline: list = field(default_factory=list)
+    parent: int | None = None       # root span of the owning request
+    wait_sid: int = -1              # admission-wait span
+    decode_sid: int = -1            # decode-residency span (tick parent)
 
 
 @dataclass
@@ -68,16 +73,23 @@ class DecodeStream:
     """Continuous-batching decode state for one generative module."""
 
     def __init__(self, engine, module: str, *, rows: int, n_pages: int,
-                 page_size: int, max_seq_len: int, now=None):
+                 page_size: int, max_seq_len: int, now=None,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.engine = engine
         self.module = module
         self.rt = engine.decoder_runtime(module)
         self.page_size = page_size
         self.max_seq_len = max_seq_len
         self.n_max = -(-max_seq_len // page_size)
-        self.pool = PagePool(n_pages, page_size)
-        self.rows = SlotPool(rows)
         self._now = now or (lambda: 0.0)
+        # standalone streams get their own registry/tracer; under a
+        # ServeScheduler both are shared so stats and traces are unified
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer = tracer or Tracer(clock=self._now)
+        self.pool = PagePool(n_pages, page_size, metrics=self.metrics,
+                             module=module)
+        self.rows = SlotPool(rows)
         self.cache = engine.init_paged_cache(module, n_pages, page_size,
                                              jnp.float32)
         self._lock = threading.RLock()
@@ -92,11 +104,30 @@ class DecodeStream:
         self._worst: dict[int, int] = {}  # rid -> reserved worst pages
         self._reserved = 0
         self._busy = False
-        # counters (read via stats_dict)
-        self.decode_steps = 0
-        self.decode_tokens = 0
-        self.prefills = 0
-        self.cross_task_decode_batches = 0
+        # counters (read via the int properties / stats_dict)
+        self._c_steps = self.metrics.counter("decode.steps", module=module)
+        self._c_tokens = self.metrics.counter("decode.tokens", module=module)
+        self._c_prefills = self.metrics.counter("decode.prefills",
+                                                module=module)
+        self._c_xtask = self.metrics.counter("decode.cross_task_batches",
+                                             module=module)
+
+    # legacy counter attributes, now views over the metrics registry
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c_steps.value)
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self._c_tokens.value)
+
+    @property
+    def prefills(self) -> int:
+        return int(self._c_prefills.value)
+
+    @property
+    def cross_task_decode_batches(self) -> int:
+        return int(self._c_xtask.value)
 
     # -- sizing ---------------------------------------------------------
     def _worst_tokens(self, request: Request) -> int:
@@ -124,9 +155,12 @@ class DecodeStream:
             return len(self.waiting) + len(self.live)
 
     def submit(self, rid: int, request: Request,
-               enc_outputs: dict[str, Any]) -> None:
+               enc_outputs: dict[str, Any],
+               parent: int | None = None) -> None:
         self.validate(request)
-        seq = _GenSeq(rid, request, enc_outputs, self._now())
+        seq = _GenSeq(rid, request, enc_outputs, self._now(), parent=parent)
+        seq.wait_sid = self.tracer.begin(self.module, "admission", rid=rid,
+                                         parent=parent)
         deadline = (request.slo_deadline if request.slo_deadline is not None
                     else float("inf"))
         with self._lock:
@@ -165,6 +199,7 @@ class DecodeStream:
             self.tables[row, :len(pages)] = pages
             self.lengths[row] = prefix_len
             self.live[row] = seq
+            self.tracer.end(seq.wait_sid)
             return seq
 
     def _finish_locked(self, seq: _GenSeq) -> None:
@@ -194,9 +229,12 @@ class DecodeStream:
         seq.rng, k = jax.random.split(seq.rng)
         tok = int(select_token(logits[0], k, temperature=req.temperature))
         seq.tokens.append(tok)
-        seq.timeline.append((self.module, "prefill", t0, self._now()))
-        with self._lock:
-            self.prefills += 1
+        span = self.tracer.record(self.module, "prefill", t0, self._now(),
+                                  rid=seq.rid, parent=seq.parent,
+                                  prompt_tokens=len(req.prompt),
+                                  prefix_len=seq.length)
+        seq.timeline.append(span)
+        self._c_prefills.inc()
 
     def _seq_done(self, seq: _GenSeq) -> bool:
         req = seq.request
@@ -215,6 +253,11 @@ class DecodeStream:
                 with self._lock:
                     self._finish_locked(seq)
                 finished.append(seq)
+            else:
+                # residency span: every decode tick of this sequence
+                # parents under it
+                seq.decode_sid = self.tracer.begin(
+                    self.module, "decode", rid=seq.rid, parent=seq.parent)
         return finished
 
     def _decode_once(self) -> tuple[list[_GenSeq], int]:
@@ -236,9 +279,11 @@ class DecodeStream:
                 tokens[row, 0] = seq.tokens[-1]
             tables = self.tables.copy()
             lengths = self.lengths.copy()
-            self.decode_steps += 1
+            pages_live = self.pool.n_live_pages
+            self._c_steps.inc()
             if len({seq.request.model for _, seq in live}) >= 2:
-                self.cross_task_decode_batches += 1
+                self._c_xtask.inc()
+        t0 = self._now()
         logits, cache = self.engine.apply_paged_decode(
             self.module, jnp.asarray(tokens), self.cache,
             jnp.asarray(tables), jnp.asarray(lengths))
@@ -248,6 +293,11 @@ class DecodeStream:
             seq.rng, k = jax.random.split(seq.rng)
             picks[row] = int(select_token(
                 logits[row], k, temperature=seq.request.temperature))
+        t1 = self._now()
+        for row, seq in live:
+            self.tracer.record(self.module, "decode_tick", t0, t1,
+                               rid=seq.rid, parent=seq.decode_sid,
+                               rows=len(live), pages_live=pages_live)
         finished = []
         with self._lock:
             for row, seq in live:
@@ -255,10 +305,10 @@ class DecodeStream:
                 self.lengths[row] = seq.length
                 self.pool.used_tokens[seq.rid] = seq.length
                 seq.tokens.append(picks[row])
-                self.decode_tokens += 1
+                self._c_tokens.inc()
                 if self._seq_done(seq):
                     seq.timeline.append(
-                        (self.module, "decode", seq.t_submit, self._now()))
+                        self.tracer.end(seq.decode_sid, t1=self._now()))
                     self._finish_locked(seq)
                     finished.append(seq)
         return finished, len(live)

@@ -20,7 +20,6 @@ examples/multi_task_serving.py.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -28,6 +27,8 @@ import jax
 from repro.core.module import ModelSpec, ModuleSpec
 from repro.core.placement import Placement
 from repro.core.registry import ModuleRegistry
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Span, Tracer
 
 
 @dataclasses.dataclass
@@ -76,7 +77,9 @@ class InferenceResult:
     model: str
     output: Any
     encoder_outputs: dict[str, Any]
-    timeline: list[tuple[str, str, float, float]]   # (module, phase, t0, t1)
+    # obs.trace spans, one per module phase; each still unpacks as the
+    # legacy (module, phase, t0, t1) tuple
+    timeline: list[Span]
     latency_s: float
     # placement device name each module ran on — comparable with the
     # simulator's per-request routes (s2m3.PlanReport.routes)
@@ -87,12 +90,19 @@ class InferenceResult:
 class S2M3Engine:
     def __init__(self, device_map: dict[str, Any] | None = None, *,
                  registry: ModuleRegistry | None = None,
-                 cluster=None, routing: str = "paper"):
+                 cluster=None, routing: str = "paper",
+                 tracer: Tracer | None = None):
         """device_map: placement device name -> jax.Device.  Defaults to a
         single-device map over jax.devices()[0].  When ``cluster`` is
         given, replica choice among a module's placement hosts goes
         through the named routing policy instead of first-host."""
         self.registry = registry or ModuleRegistry()
+        # solo infer()/generate() spans land here; the serving scheduler
+        # uses its own epoch-relative tracer for the batched paths
+        self.tracer = tracer or Tracer()
+        # engine-lifetime instruments (per-module call counts); each
+        # ServeScheduler keeps its own per-run registry on top
+        self.metrics = MetricsRegistry()
         self.runtimes: dict[str, ModuleRuntime] = {}
         self.decoders: dict[str, DecoderRuntime] = {}
         self.device_map = device_map or {"dev0": jax.devices()[0]}
@@ -248,6 +258,7 @@ class S2M3Engine:
         used = host if host is not None and host in self.device_map else rt.host
         params = self.params_on(module_name, used)
         x = jax.device_put(x, self._device_for(used))
+        self.metrics.counter("engine.module_calls", module=module_name).inc()
         return rt.apply(params, x), used
 
     def apply_head(self, module_name: str, enc_outputs: dict[str, Any],
@@ -260,6 +271,7 @@ class S2M3Engine:
         params = self.params_on(module_name, used)
         dev = self._device_for(used)
         moved = {k: jax.device_put(v, dev) for k, v in enc_outputs.items()}
+        self.metrics.counter("engine.head_calls", module=module_name).inc()
         return rt.apply(params, moved, **(head_extra or {})), used
 
     # -- generative (decoder-head) path ---------------------------------
@@ -301,6 +313,7 @@ class S2M3Engine:
         (last-token logits, filled dense cache)."""
         rt = self.decoder_runtime(module_name)
         batch = {k: jax.device_put(v, rt.device) for k, v in batch.items()}
+        self.metrics.counter("engine.prefills", module=module_name).inc()
         return rt.prefill_jit(rt.params, batch, cache)
 
     def apply_paged_decode(self, module_name: str, tokens, cache,
@@ -313,6 +326,7 @@ class S2M3Engine:
             raise NotImplementedError(
                 f"decoder {module_name!r} (family "
                 f"{rt.bundle.cfg.family!r}) has no paged decode path")
+        self.metrics.counter("engine.decode_steps", module=module_name).inc()
         return rt.paged_decode_jit(rt.params, tokens, cache,
                                    block_tables, lengths)
 
@@ -332,7 +346,10 @@ class S2M3Engine:
                 f"request {request.rid} targets generative model "
                 f"{request.model!r} but has no prompt")
         rt = self.decoder_runtime(model.head.name)
-        t_start = time.perf_counter()
+        now = self.tracer.clock
+        t_start = now()
+        root = self.tracer.begin("request", "request", rid=request.rid,
+                                 t0=t_start, model=request.model)
         timeline = []
         devices = {}
         # head-only models may carry precomputed modality features as
@@ -340,10 +357,12 @@ class S2M3Engine:
         # encoder); live encoders overwrite their modality below
         enc_outputs: dict[str, Any] = dict(request.inputs or {})
         for enc in model.encoders:
-            t0 = time.perf_counter()
+            t0 = now()
             out, used = self.apply_module(enc.name, request.inputs[enc.modality])
             out = jax.block_until_ready(out)
-            timeline.append((enc.name, "encode", t0, time.perf_counter()))
+            timeline.append(self.tracer.record(
+                enc.name, "encode", t0, now(), rid=request.rid,
+                parent=root, host=used))
             enc_outputs[enc.modality] = out
             if used:
                 devices[enc.name] = used
@@ -355,17 +374,19 @@ class S2M3Engine:
         total = rt.n_prefix + len(prompt) + max_new + 1
         T = -(-total // 8) * 8
         cache = rt.bundle.init_cache(1, T, jnp.float32)
-        t0 = time.perf_counter()
+        t0 = now()
         logits, cache = self.apply_prefill(
             model.head.name, self.gen_batch(prompt, enc_outputs), cache)
-        timeline.append((model.head.name, "prefill", t0, time.perf_counter()))
+        timeline.append(self.tracer.record(
+            model.head.name, "prefill", t0, now(), rid=request.rid,
+            parent=root, prompt_tokens=len(prompt)))
 
         rng = jax.random.PRNGKey((request.rid or 0) & 0x7FFFFFFF)
         rng, k = jax.random.split(rng)
         toks = [int(select_token(logits[0], k,
                                  temperature=request.temperature))]
         L = rt.n_prefix + len(prompt)
-        t0 = time.perf_counter()
+        t0 = now()
         while (len(toks) < max_new and toks[-1] != request.eos_id
                and L < T - 1):
             logits, cache = rt.decode_jit(
@@ -375,11 +396,15 @@ class S2M3Engine:
             rng, k = jax.random.split(rng)
             toks.append(int(select_token(logits[0], k,
                                          temperature=request.temperature)))
-        timeline.append((model.head.name, "decode", t0, time.perf_counter()))
+        timeline.append(self.tracer.record(
+            model.head.name, "decode", t0, now(), rid=request.rid,
+            parent=root, new_tokens=len(toks)))
+        t_end = now()
+        self.tracer.end(root, t1=t_end)
         return InferenceResult(
             model=request.model, output=np.asarray(toks, np.int32),
             encoder_outputs=enc_outputs, timeline=timeline,
-            latency_s=time.perf_counter() - t_start, devices=devices,
+            latency_s=t_end - t_start, devices=devices,
             rid=request.rid)
 
     # -- inference ------------------------------------------------------
@@ -394,7 +419,10 @@ class S2M3Engine:
                 f"model {model_name!r} has a generative head; use "
                 "generate(request) for solo inference or the serving "
                 "scheduler for batched decode")
-        t_start = time.perf_counter()
+        now = self.tracer.clock
+        t_start = now()
+        root = self.tracer.begin("request", "request", rid=rid,
+                                 t0=t_start, model=model_name)
         timeline = []
         devices = {m.name: rt.host for m in model.modules
                    if (rt := self.runtimes.get(m.name)) and rt.host}
@@ -403,7 +431,7 @@ class S2M3Engine:
         # device_put moves the modality payload to the hosting device
         pending: dict[str, Any] = {}
         for enc in model.encoders:
-            t0 = time.perf_counter()
+            t0 = now()
             out, used = self.apply_module(enc.name, inputs[enc.modality])
             pending[enc.modality] = (enc.name, out, t0)
             if used:
@@ -412,20 +440,26 @@ class S2M3Engine:
         enc_outputs = {}
         for modality, (name, out, t0) in pending.items():
             out = jax.block_until_ready(out)
-            timeline.append((name, "encode", t0, time.perf_counter()))
+            timeline.append(self.tracer.record(
+                name, "encode", t0, now(), rid=rid, parent=root,
+                host=devices.get(name)))
             enc_outputs[modality] = out
 
-        t0 = time.perf_counter()
+        t0 = now()
         result, used = self.apply_head(model.head.name, enc_outputs,
                                        head_extra)
         result = jax.block_until_ready(result)
-        timeline.append((model.head.name, "head", t0, time.perf_counter()))
+        timeline.append(self.tracer.record(
+            model.head.name, "head", t0, now(), rid=rid, parent=root,
+            host=used))
         if used:
             devices[model.head.name] = used
 
+        t_end = now()
+        self.tracer.end(root, t1=t_end)
         return InferenceResult(
             model=model_name, output=result, encoder_outputs=enc_outputs,
-            timeline=timeline, latency_s=time.perf_counter() - t_start,
+            timeline=timeline, latency_s=t_end - t_start,
             devices=devices, rid=rid)
 
     # -- stats ----------------------------------------------------------

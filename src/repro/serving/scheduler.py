@@ -79,6 +79,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.routing import QueueSnapshot, Request, batch_factor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serving.decode import DecodeStream
 from repro.serving.engine import InferenceResult, S2M3Engine
 
@@ -115,32 +117,10 @@ class SchedulerConfig:
                 "plus the dummy page")
 
 
-@dataclass
-class ModuleStats:
-    """Per-module serving counters; what makes the simulator's
-    batching predictions checkable against reality."""
-
-    module: str
-    n_calls: int = 0                      # device calls (formed batches)
-    n_stages: int = 0                     # request-stages served
-    batch_sizes: list[int] = field(default_factory=list)
-    cross_task_batches: int = 0           # batches mixing >= 2 models
-    max_depth: int = 0                    # peak queue depth observed
-
-    @property
-    def mean_occupancy(self) -> float:
-        return (sum(self.batch_sizes) / len(self.batch_sizes)
-                if self.batch_sizes else 0.0)
-
-    def as_dict(self) -> dict[str, Any]:
-        return {
-            "module": self.module, "calls": self.n_calls,
-            "stages": self.n_stages,
-            "mean_occupancy": round(self.mean_occupancy, 3),
-            "max_batch": max(self.batch_sizes, default=0),
-            "cross_task_batches": self.cross_task_batches,
-            "max_depth": self.max_depth,
-        }
+#: legacy per-module stats_dict() keys, now a compatibility view over
+#: the serve.* instruments in ``ServeScheduler.metrics``
+STAT_KEYS = ("module", "calls", "stages", "mean_occupancy", "max_batch",
+             "cross_task_batches", "max_depth")
 
 
 @dataclass
@@ -149,6 +129,7 @@ class _Stage:
     module: str
     request: Request
     x: Any = None                         # encoder payload (None for heads)
+    wait_sid: int = -1                    # queue-wait span (admission)
 
 
 @dataclass
@@ -156,6 +137,7 @@ class _InFlight:
     request: Request
     t_admit: float
     pending: set[str]                     # encoder module names outstanding
+    root_sid: int = -1                    # the request's root trace span
     enc_outputs: dict[str, Any] = field(default_factory=dict)
     devices: dict[str, str] = field(default_factory=dict)
     timeline: list = field(default_factory=list)
@@ -165,7 +147,8 @@ class ServeScheduler:
     """Continuous-batching core over a live ``S2M3Engine``."""
 
     def __init__(self, engine: S2M3Engine, *,
-                 config: SchedulerConfig | None = None, on_finish=None):
+                 config: SchedulerConfig | None = None, on_finish=None,
+                 tracer: Tracer | None = None):
         self.engine = engine
         self.cfg = config or SchedulerConfig()
         # streaming hook: called with each InferenceResult as its
@@ -174,12 +157,15 @@ class ServeScheduler:
         self.on_finish = on_finish
         self.queues: dict[str, deque[_Stage]] = {}
         self.decode: dict[str, DecodeStream] = {}
-        self.stats: dict[str, ModuleStats] = {}
         self.inflight: dict[int, _InFlight] = {}
         self.results: dict[int, InferenceResult] = {}
         self._free_at: dict[str, float] = {}   # host -> predicted busy-until
         self._epoch = time.perf_counter()
-        # guards queues/stats/inflight/results/_free_at; RLock so a
+        # fresh per-scheduler registry: stats_dict() stays zeroed until
+        # this scheduler actually serves (dep.serve() builds one per call)
+        self.metrics = MetricsRegistry()
+        self.tracer = tracer or Tracer(clock=self._now)
+        # guards queues/inflight/results/_free_at; RLock so a
         # blocked submit() may re-enter through step().  Discipline
         # (enforced by repro.analysis.concurrency_lint): mutate shared
         # state only under the lock; never dispatch device work while
@@ -210,25 +196,41 @@ class ServeScheduler:
                 depths[m] = depths.get(m, 0) + d
         return depths
 
+    def _module_row(self, module: str) -> dict[str, Any]:
+        mt = self.metrics
+        occ = mt.get("serve.batch_occupancy", module=module)
+        return {
+            "module": module,
+            "calls": int(mt.value("serve.calls", module=module)),
+            "stages": int(mt.value("serve.stages", module=module)),
+            "mean_occupancy": round(occ.mean, 3) if occ is not None else 0.0,
+            "max_batch": int(occ.max) if occ is not None else 0,
+            "cross_task_batches": int(
+                mt.value("serve.cross_task_batches", module=module)),
+            "max_depth": int(mt.value("serve.max_depth", module=module)),
+        }
+
     def stats_dict(self) -> dict[str, dict[str, Any]]:
         """Stable-schema stats: one row per deployed module (plus any
         queue that ever formed), all counter keys present and zeroed
-        even before the first ``serve()``/``step()``.  Generative head
-        rows additionally carry the decode-substrate counters and
-        page-occupancy keys from their ``DecodeStream``."""
+        even before the first ``serve()``/``step()``.  A compatibility
+        view over the ``serve.*`` instruments in ``self.metrics``.
+        Generative head rows additionally carry the decode-substrate
+        counters and page-occupancy keys from their ``DecodeStream``."""
+        names = set(self.engine.registry.modules)
+        names.update(self.metrics.label_values("serve.max_depth", "module"))
+        names.update(self.metrics.label_values("serve.calls", "module"))
         with self._lock:
-            names = set(self.stats) | set(self.engine.registry.modules)
-            rows = {m: self.stats.get(m, ModuleStats(m)).as_dict()
-                    for m in sorted(names)}
             streams = dict(self.decode)
+        rows = {m: self._module_row(m) for m in sorted(names)}
         for m, stream in streams.items():
-            rows.setdefault(m, ModuleStats(m).as_dict())
+            rows.setdefault(m, self._module_row(m))
             rows[m].update(stream.stats_dict())
         return rows
 
     @property
     def cross_task_batches(self) -> int:
-        return sum(st.cross_task_batches for st in self.stats.values())
+        return int(self.metrics.total("serve.cross_task_batches"))
 
     @property
     def cross_task_decode_batches(self) -> int:
@@ -253,17 +255,24 @@ class ServeScheduler:
         if model.head.generative:
             stream = self._ensure_stream(model.head.name)
             stream.validate(request)      # fail fast, before encoder admit
+        root = self.tracer.begin("request", "request", rid=request.rid,
+                                 model=request.model)
         targets = [m.name for m in model.encoders] + [model.head.name]
-        for t in targets:
-            while self._at_depth(t):
-                if self.cfg.admission == "reject":
-                    raise QueueFull(
-                        f"module queue {t!r} at max_queue_depth="
-                        f"{self.cfg.max_queue_depth}")
-                if not self.step():
-                    break                 # nothing serviceable: admit anyway
+        try:
+            for t in targets:
+                while self._at_depth(t):
+                    if self.cfg.admission == "reject":
+                        raise QueueFull(
+                            f"module queue {t!r} at max_queue_depth="
+                            f"{self.cfg.max_queue_depth}")
+                    if not self.step():
+                        break             # nothing serviceable: admit anyway
+        except QueueFull:
+            self.tracer.end(root, rejected=True)
+            raise
         fl = _InFlight(request, self._now(),
-                       pending={m.name for m in model.encoders})
+                       pending={m.name for m in model.encoders},
+                       root_sid=root)
         with self._lock:
             self.inflight[request.rid] = fl
         if model.encoders:
@@ -273,7 +282,8 @@ class ServeScheduler:
         elif stream is not None:
             # head-only generative: any inputs payload carries
             # precomputed modality features (e.g. VLM image embeds)
-            stream.submit(request.rid, request, dict(request.inputs or {}))
+            stream.submit(request.rid, request, dict(request.inputs or {}),
+                          parent=root)
         else:
             self._enqueue(_Stage(request.rid, model.head.name, request))
 
@@ -285,7 +295,8 @@ class ServeScheduler:
             stream = DecodeStream(
                 self.engine, module, rows=self.cfg.decode_rows,
                 n_pages=self.cfg.decode_pages, page_size=self.cfg.page_size,
-                max_seq_len=self.cfg.max_seq_len, now=self._now)
+                max_seq_len=self.cfg.max_seq_len, now=self._now,
+                tracer=self.tracer, metrics=self.metrics)
             with self._lock:
                 stream = self.decode.setdefault(module, stream)
         return stream
@@ -302,9 +313,12 @@ class ServeScheduler:
         with self._lock:
             q = self.queues.setdefault(stage.module, deque())
             q.append(stage)
-            st = self.stats.setdefault(stage.module,
-                                       ModuleStats(stage.module))
-            st.max_depth = max(st.max_depth, len(q))
+            depth = len(q)
+            root = self.inflight[stage.rid].root_sid
+        stage.wait_sid = self.tracer.begin(stage.module, "admission",
+                                           rid=stage.rid, parent=root)
+        self.metrics.gauge("serve.max_depth",
+                           module=stage.module).track_max(depth)
 
     # -- scheduling -----------------------------------------------------
     def step(self) -> bool:
@@ -363,10 +377,14 @@ class ServeScheduler:
                     else:
                         skipped.append(s)  # incompatible payload: stays FIFO
                 q.extendleft(reversed(skipped))
+        t_pop = self._now()
+        for s in batch:
+            if s.wait_sid >= 0:
+                self.tracer.end(s.wait_sid, t1=t_pop)
         if is_encoder:
-            self._run_encoder_batch(module, batch)
+            self._run_encoder_batch(module, batch, t_pop)
         else:
-            self._run_head(module, batch[0])
+            self._run_head(module, batch[0], t_pop)
 
     @staticmethod
     def _shape_sig(x) -> tuple | None:
@@ -401,17 +419,29 @@ class ServeScheduler:
             self._free_at[host] = max(self._free_at.get(host, 0.0),
                                       t_dispatch) + t_est
 
-    def _bookkeep(self, module: str, batch: list[_Stage]) -> ModuleStats:
-        with self._lock:
-            st = self.stats.setdefault(module, ModuleStats(module))
-            st.n_calls += 1
-            st.n_stages += len(batch)
-            st.batch_sizes.append(len(batch))
-            if len({s.request.model for s in batch}) >= 2:
-                st.cross_task_batches += 1
-            return st
+    def _bookkeep(self, module: str, batch: list[_Stage]) -> None:
+        mt = self.metrics
+        mt.counter("serve.calls", module=module).inc()
+        mt.counter("serve.stages", module=module).inc(len(batch))
+        mt.histogram("serve.batch_occupancy", module=module).observe(
+            len(batch))
+        if len({s.request.model for s in batch}) >= 2:
+            mt.counter("serve.cross_task_batches", module=module).inc()
 
-    def _run_encoder_batch(self, module: str, batch: list[_Stage]) -> None:
+    def _finish_metrics(self, result: InferenceResult,
+                        request: Request) -> None:
+        """Per-task latency histogram + SLO hit/miss — what powers
+        ``obs.summary.slo_summary``."""
+        mt = self.metrics
+        mt.histogram("request.latency_s", model=result.model).observe(
+            result.latency_s)
+        if request.slo_deadline is not None:
+            met = result.latency_s <= request.slo_deadline
+            mt.counter("slo.hit" if met else "slo.miss",
+                       model=result.model).inc()
+
+    def _run_encoder_batch(self, module: str, batch: list[_Stage],
+                           t_pop: float) -> None:
         host = self._route(module, batch[0])
         t0 = self._now()
         if len(batch) == 1:
@@ -428,18 +458,27 @@ class ServeScheduler:
         self._bookkeep(module, batch)
         t1 = self._now()
         modality = self.engine.registry.modules[module].modality
+        models = sorted({s.request.model for s in batch})
         for s, o in zip(batch, outs):
             fl = self.inflight[s.rid]
+            self.tracer.record(module, "batch", t_pop, t0, rid=s.rid,
+                               parent=fl.root_sid, batch=len(batch),
+                               models=models)
+            span = self.tracer.record(
+                module, "encode", t0, t1, rid=s.rid, parent=fl.root_sid,
+                host=used, batch=len(batch), models=models,
+                cross_task=len(models) >= 2)
             fl.enc_outputs[modality] = o
             if used:
                 fl.devices[module] = used
-            fl.timeline.append((module, "encode", t0, t1))
+            fl.timeline.append(span)
             fl.pending.discard(module)
             if not fl.pending:
                 head = self.engine.registry.models[s.request.model].head
                 if head.generative:
                     stream = self._ensure_stream(head.name)
-                    stream.submit(s.rid, s.request, dict(fl.enc_outputs))
+                    stream.submit(s.rid, s.request, dict(fl.enc_outputs),
+                                  parent=fl.root_sid)
                 else:
                     self._enqueue(_Stage(s.rid, head.name, s.request))
 
@@ -458,18 +497,22 @@ class ServeScheduler:
                 fl.devices[module] = host
             enc = {k: jax.block_until_ready(v)
                    for k, v in fl.enc_outputs.items()}
+            t_end = self._now()
             result = InferenceResult(
                 model=seq.request.model,
                 output=np.asarray(seq.tokens, np.int32),
                 encoder_outputs=enc, timeline=fl.timeline,
-                latency_s=self._now() - fl.t_admit, devices=fl.devices,
+                latency_s=t_end - fl.t_admit, devices=fl.devices,
                 rid=seq.rid)
+            self.tracer.end(fl.root_sid, t1=t_end,
+                            n_tokens=len(seq.tokens))
+            self._finish_metrics(result, seq.request)
             with self._lock:
                 self.results[seq.rid] = result
             if self.on_finish is not None:
                 self.on_finish(result)
 
-    def _run_head(self, module: str, stage: _Stage) -> None:
+    def _run_head(self, module: str, stage: _Stage, t_pop: float) -> None:
         with self._lock:
             fl = self.inflight.pop(stage.rid)
         host = self._route(module, stage)
@@ -480,15 +523,21 @@ class ServeScheduler:
         self._charge(module, used, 1, t0)
         self._bookkeep(module, [stage])
         t1 = self._now()
+        self.tracer.record(module, "batch", t_pop, t0, rid=stage.rid,
+                           parent=fl.root_sid, batch=1)
+        span = self.tracer.record(module, "head", t0, t1, rid=stage.rid,
+                                  parent=fl.root_sid, host=used)
         if used:
             fl.devices[module] = used
-        fl.timeline.append((module, "head", t0, t1))
+        fl.timeline.append(span)
         fl.enc_outputs = {k: jax.block_until_ready(v)
                           for k, v in fl.enc_outputs.items()}
         result = InferenceResult(
             model=stage.request.model, output=out,
             encoder_outputs=fl.enc_outputs, timeline=fl.timeline,
             latency_s=t1 - fl.t_admit, devices=fl.devices, rid=stage.rid)
+        self.tracer.end(fl.root_sid, t1=t1)
+        self._finish_metrics(result, stage.request)
         with self._lock:
             self.results[stage.rid] = result
         if self.on_finish is not None:

@@ -214,15 +214,14 @@ def test_engine_module_hosts_raises_plan_error():
 # ---- scheduler stats schema (satellite) ---------------------------------
 
 def test_stats_dict_stable_schema_before_serving():
-    from repro.serving.scheduler import ModuleStats, ServeScheduler
+    from repro.serving.scheduler import STAT_KEYS, ServeScheduler
 
     dep = _dep(materialize=True)
     sched = ServeScheduler(dep.engine)
     sd = sched.stats_dict()
-    expected_keys = set(ModuleStats("x").as_dict())
     assert set(sd) == set(dep.registry.modules)    # every deployed module
     for name, row in sd.items():
-        assert set(row) == expected_keys
+        assert set(row) == set(STAT_KEYS)
         assert row["calls"] == 0 and row["stages"] == 0
         assert row["module"] == name
 

@@ -66,14 +66,86 @@ def test_non_latency_keys_ignored():
     assert regs == [] and notes == []
 
 
+def _write(path, snap, machine=None):
+    snap = dict(snap)
+    snap["machine"] = (bench_diff.machine_profile()
+                       if machine is None else machine)
+    path.write_text(json.dumps(snap))
+    return path
+
+
 def test_cli_exit_codes(tmp_path, capsys):
-    old = tmp_path / "old.json"
-    new = tmp_path / "new.json"
-    old.write_text(json.dumps(_snap([{"name": "a", "p50_ms": 10.0}])))
-    new.write_text(json.dumps(_snap([{"name": "a", "p50_ms": 100.0}])))
+    old = _write(tmp_path / "old.json",
+                 _snap([{"name": "a", "p50_ms": 10.0}]))
+    new = _write(tmp_path / "new.json",
+                 _snap([{"name": "a", "p50_ms": 100.0}]))
     assert bench_diff.main([str(old), str(new)]) == 1
     assert "REGRESSION a.p50_ms" in capsys.readouterr().out
     assert bench_diff.main([str(old), str(old)]) == 0
+
+
+# ---- machine-profile guard ----------------------------------------------
+
+def test_machine_profile_has_identity_keys():
+    prof = bench_diff.machine_profile()
+    assert {"platform", "python", "jax"} <= set(prof)
+    assert bench_diff.profile_mismatches(prof, dict(prof)) == []
+
+
+def test_cross_machine_comparison_refused(tmp_path, capsys):
+    rows = [{"name": "a", "p50_ms": 10.0}]
+    other = dict(bench_diff.machine_profile(),
+                 platform="Linux-0.0-other-box", device_kind="TPU v9000")
+    old = _write(tmp_path / "old.json", _snap(rows), machine=other)
+    new = _write(tmp_path / "new.json", _snap(rows))
+    assert bench_diff.main([str(old), str(new)]) == 2
+    out = capsys.readouterr().out
+    assert "refusing cross-machine comparison" in out
+    assert "platform" in out
+    # explicit override still compares
+    assert bench_diff.main(["--ignore-machine", str(old), str(new)]) == 0
+
+
+def test_snapshot_without_profile_header_refused(tmp_path, capsys):
+    p = tmp_path / "bare.json"
+    p.write_text(json.dumps(_snap([{"name": "a", "p50_ms": 1.0}])))
+    q = _write(tmp_path / "ok.json", _snap([{"name": "a", "p50_ms": 1.0}]))
+    assert bench_diff.main([str(p), str(q)]) == 2
+    assert "no machine profile header" in capsys.readouterr().out
+
+
+# ---- clear messages instead of tracebacks -------------------------------
+
+def test_missing_file_is_message_not_traceback(tmp_path, capsys):
+    ok = _write(tmp_path / "ok.json", _snap([{"name": "a", "p50_ms": 1.0}]))
+    assert bench_diff.main([str(tmp_path / "nope.json"), str(ok)]) == 2
+    assert "does not exist" in capsys.readouterr().out
+
+
+def test_unreadable_json_is_message_not_traceback(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    ok = _write(tmp_path / "ok.json", _snap([{"name": "a", "p50_ms": 1.0}]))
+    assert bench_diff.main([str(bad), str(ok)]) == 2
+    assert "not readable JSON" in capsys.readouterr().out
+
+
+def test_section_mismatch_is_refused(tmp_path, capsys):
+    old = _write(tmp_path / "old.json",
+                 _snap([{"name": "a", "p50_ms": 1.0}], section="kernels"))
+    new = _write(tmp_path / "new.json",
+                 _snap([{"name": "a", "p50_ms": 1.0}], section="serving"))
+    assert bench_diff.main([str(old), str(new)]) == 2
+    assert "section mismatch" in capsys.readouterr().out
+
+
+def test_disjoint_row_names_are_refused(tmp_path, capsys):
+    old = _write(tmp_path / "old.json",
+                 _snap([{"name": "a", "p50_ms": 1.0}]))
+    new = _write(tmp_path / "new.json",
+                 _snap([{"name": "b", "p50_ms": 1.0}]))
+    assert bench_diff.main([str(old), str(new)]) == 2
+    assert "share no row names" in capsys.readouterr().out
 
 
 def test_real_snapshot_self_diff_is_clean():
