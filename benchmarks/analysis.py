@@ -1,0 +1,78 @@
+"""Analysis-pass benchmark section: wall-clock of the static verifier,
+the interprocedural lockset detector, and the schedule-space model
+checker.
+
+These are the passes ``Deployment.verify()`` and ``python -m
+repro.analysis --self`` put on every pre-flight and CI run, so a
+slowdown here is a tax on *all* workflows.  Rows feed
+``benchmarks/run.py`` → ``BENCH_analysis.json``; the ``--self`` bench
+gate diffs ``wall_s`` against the snapshot and fails on a blowup, the
+same tripwire the kernel and serving sections get.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _timed(fn, *, iters: int = 3):
+    """(result, median wall seconds) after one warmup call."""
+    fn()
+    samples = []
+    result = None
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        result = fn()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return result, samples[len(samples) // 2]
+
+
+def run():
+    from repro.analysis import locksets, modelcheck
+    from repro.analysis.concurrency_lint import lint_serving
+
+    rows = []
+
+    diags, wall = _timed(lint_serving)
+    rows.append({
+        "name": "concurrency_lint_serving",
+        "wall_s": round(wall, 4),
+        "us_per_call": round(wall * 1e6, 1),
+        "findings": len(diags),
+    })
+
+    rep, wall = _timed(locksets.lint_serving_locksets)
+    rows.append({
+        "name": "lockset_serving",
+        "wall_s": round(wall, 4),
+        "us_per_call": round(wall * 1e6, 1),
+        "contexts": rep.contexts,
+        "accesses": rep.accesses,
+        "findings": len(rep.diagnostics),
+    })
+
+    res, wall = _timed(
+        lambda: modelcheck.check(modelcheck.default_scenario(),
+                                 budget_s=60.0))
+    rows.append({
+        "name": "modelcheck_default",
+        "wall_s": round(wall, 4),
+        "us_per_call": round(wall * 1e6, 1),
+        "states": res.states,
+        "transitions": res.transitions,
+        "states_per_s": round(res.states / wall) if wall > 0 else None,
+        "complete": res.complete,
+        "violation": res.counterexample is not None,
+    })
+
+    res, wall = _timed(lambda: modelcheck.self_test(budget_s=60.0))
+    rows.append({
+        "name": "modelcheck_self_test",
+        "wall_s": round(wall, 4),
+        "us_per_call": round(wall * 1e6, 1),
+        "mutations": len(modelcheck.MUTATIONS),
+        "findings": len(res),
+    })
+
+    return rows

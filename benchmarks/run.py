@@ -39,7 +39,8 @@ def _snapshot(section: str, rows, error: str | None = None) -> None:
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from benchmarks import (
-        kernels, microbench, optimality, roofline, serving, tables,
+        analysis, kernels, microbench, optimality, roofline, serving,
+        tables,
     )
 
     sections = {
@@ -55,6 +56,7 @@ def main() -> None:
         "microbench": microbench.run,
         "serving": serving.run,
         "kernels": kernels.run,
+        "analysis": analysis.run,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():

@@ -50,12 +50,19 @@ __all__ = [
 def verify_deployment(dep, *, kernels: bool = False,
                       vmem_budget: int | None = None,
                       decode_pages: int | None = None,
-                      page_size: int | None = None) -> list[Diagnostic]:
-    """Run the static plan verifier (and optionally the kernel checker)
-    against a ``s2m3.Deployment``.  When ``decode_pages``/``page_size``
-    are given (the serve() pre-flight passes the scheduler's actual
-    knobs), generative heads' paged-KV pools are checked against the
-    per-device memory ledgers too.  Pure inspection: raises nothing,
+                      page_size: int | None = None,
+                      model_check: bool = False,
+                      mc_budget: float = 10.0) -> list[Diagnostic]:
+    """Run the static plan verifier (and optionally the kernel checker
+    and schedule-space model checker) against a ``s2m3.Deployment``.
+    When ``decode_pages``/``page_size`` are given (the serve()
+    pre-flight passes the scheduler's actual knobs), generative heads'
+    paged-KV pools are checked against the per-device memory ledgers
+    too.  ``model_check=True`` exhaustively explores bounded request
+    interleavings of a scenario derived from this deployment's models
+    (``modelcheck.scenario_from_deployment``), evaluating the invariant
+    catalog at every state; a counterexample becomes an ERROR carrying
+    the replayable transition script.  Pure inspection: raises nothing,
     returns the finding list for the caller's policy."""
     from repro.analysis.plan_check import check_page_budget, check_plan
 
@@ -71,4 +78,34 @@ def verify_deployment(dep, *, kernels: bool = False,
         from repro.analysis.kernel_check import check_kernels
 
         diags = diags + check_kernels(vmem_budget=vmem_budget)
+    if model_check:
+        diags = diags + model_check_deployment(dep, budget_s=mc_budget)
     return diags
+
+
+def model_check_deployment(dep, *, budget_s: float = 10.0
+                           ) -> list[Diagnostic]:
+    """Model-check a scenario derived from ``dep``'s registered models
+    under a wall-clock budget; one Diagnostic summarising the run, plus
+    an ERROR per invariant counterexample (with transition script)."""
+    from repro.analysis import modelcheck as mc
+
+    cfg = mc.scenario_from_deployment(dep)
+    res = mc.check(cfg, budget_s=budget_s)
+    if res.counterexample is not None:
+        cx = res.counterexample
+        return [Diagnostic(
+            Severity.ERROR, f"modelcheck/{cx.invariant}",
+            f"schedule-space violation of {cx.invariant}: {cx.message}\n"
+            f"counterexample ({len(cx.script)} step(s)):\n"
+            + cx.format_script(),
+            entity="Deployment",
+            hint="replay with repro.analysis.modelcheck.replay(); export "
+                 "a Chrome trace via Counterexample.save_trace()")]
+    sev = Severity.INFO if res.complete else Severity.WARNING
+    note = ("" if res.complete else
+            " (exploration truncated by budget — not exhaustive)")
+    return [Diagnostic(
+        sev, "modelcheck/clean" if res.complete else "modelcheck/truncated",
+        f"schedule-space model check: {res.summary()}{note}",
+        entity="Deployment")]

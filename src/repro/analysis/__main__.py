@@ -3,20 +3,29 @@
     python -m repro.analysis --self              # CI mode: lint the repro
                                                  # package + kernel sweep
                                                  # + obs self-test
+                                                 # + model-check + lockset
+                                                 #   self-tests
                                                  # + bench regression gate
     python -m repro.analysis src/repro/serving   # lint specific paths
     python -m repro.analysis --kernels           # kernel checker only
+    python -m repro.analysis --model-check       # explore the default
+                                                 # serving scenario
+    python -m repro.analysis --locksets          # interprocedural lockset
+                                                 # race detection
 
-``--self`` additionally re-runs the kernel and serving benchmark
-sections and diffs them against the committed ``BENCH_kernels.json`` /
-``BENCH_serving.json`` snapshots (``benchmarks/diff.py``); a latency
-metric regressing beyond ``--bench-threshold`` fails the run just like
-an ERROR finding.  Missing snapshots or a missing ``benchmarks/``
-package skip the gate with a note (installed-package layouts have no
-bench tree).
+``--self`` additionally runs the schedule-space model checker's
+seeded-mutation self-test and the lockset detector's self-test, both
+under the ``--mc-budget`` wall-clock cap, then re-runs the kernel and
+serving benchmark sections and diffs them against the committed
+``BENCH_*.json`` snapshots (``benchmarks/diff.py``); a latency metric
+regressing beyond ``--bench-threshold`` fails the run just like an
+ERROR finding.  Missing snapshots or a missing ``benchmarks/`` package
+skip the gate with a note (installed-package layouts have no bench
+tree).
 
-Exit status 1 when any ERROR-severity finding is emitted or the bench
-gate regresses (WARNING/INFO never fail the run).
+Exit status 1 when any ERROR-severity finding is emitted (incl. a
+model-check invariant violation) or the bench gate regresses
+(WARNING/INFO never fail the run).
 """
 
 from __future__ import annotations
@@ -44,8 +53,15 @@ def _bench_regressions(threshold: float):
     from benchmarks.diff import (diff_snapshots, machine_profile,
                                  profile_mismatches)
 
+    try:
+        from benchmarks import analysis as bench_analysis
+        sections = (("kernels", kernels.run), ("serving", serving.run),
+                    ("analysis", bench_analysis.run))
+    except ImportError:
+        sections = (("kernels", kernels.run), ("serving", serving.run))
+
     lines, failed = [], False
-    for name, fn in (("kernels", kernels.run), ("serving", serving.run)):
+    for name, fn in sections:
         snap = root / f"BENCH_{name}.json"
         if not snap.exists():
             lines.append(f"bench gate [{name}]: {snap.name} missing, "
@@ -98,6 +114,18 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
                     help="per-core VMEM budget for kernel working sets "
                          "(default 16 MiB)")
+    ap.add_argument("--model-check", action="store_true",
+                    help="exhaustively explore the default serving "
+                         "scenario's schedule space against the invariant "
+                         "catalog (exit 1 on a violation)")
+    ap.add_argument("--locksets", action="store_true",
+                    help="run the interprocedural lockset race detector "
+                         "over the serving layer")
+    ap.add_argument("--mc-budget", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="wall-clock cap for model-checker exploration "
+                         "(and the --self model-check/lockset self-tests; "
+                         "default 30)")
     ap.add_argument("--no-bench", action="store_true",
                     help="skip the benchmark regression gate in --self "
                          "mode")
@@ -115,12 +143,17 @@ def main(argv: list[str] | None = None) -> int:
     if args.self_mode:
         import repro
 
+        from repro.analysis import locksets, modelcheck
         from repro.analysis.concurrency_lint import lint_paths
         from repro.obs.selftest import self_test
 
         # repro may be a namespace package (__file__ is None): use __path__
         diags += lint_paths([Path(p) for p in repro.__path__])
         diags += self_test()
+        # seeded-mutation self-tests: the model checker must catch every
+        # injected serving bug and the unmutated tree must verify clean
+        diags += modelcheck.self_test(budget_s=args.mc_budget)
+        diags += locksets.self_test()
     elif args.paths:
         from repro.analysis.concurrency_lint import lint_paths
 
@@ -134,6 +167,30 @@ def main(argv: list[str] | None = None) -> int:
         from repro.analysis.kernel_check import check_kernels
 
         diags += check_kernels(vmem_budget=args.vmem_budget)
+
+    if args.model_check:
+        from repro.analysis import modelcheck
+        from repro.analysis.diagnostics import Diagnostic, Severity
+
+        res = modelcheck.check(modelcheck.default_scenario(),
+                               budget_s=args.mc_budget)
+        if res.counterexample is not None:
+            cx = res.counterexample
+            diags.append(Diagnostic(
+                Severity.ERROR, f"modelcheck/{cx.invariant}",
+                f"{cx.message}\ncounterexample:\n{cx.format_script()}",
+                entity="default_scenario"))
+        else:
+            diags.append(Diagnostic(
+                Severity.INFO if res.complete else Severity.WARNING,
+                "modelcheck/clean" if res.complete
+                else "modelcheck/truncated",
+                res.summary(), entity="default_scenario"))
+
+    if args.locksets:
+        from repro.analysis.locksets import lint_serving_locksets
+
+        diags += lint_serving_locksets().diagnostics
 
     print(format_report(diags))
 

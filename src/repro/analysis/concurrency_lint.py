@@ -28,7 +28,13 @@ draining consumer may touch from different threads.  The discipline is:
   contract) must mutate their state only under their lock, *every*
   mutation, not just ones some other site happens to guard: instruments
   are shared across scheduler threads by construction —
-  ``obs/unlocked-metric-mutation`` ERROR.
+  ``obs/unlocked-metric-mutation`` ERROR;
+* serving and observability code must not read wall clocks directly
+  (``time.time()`` / ``time.monotonic()``): both layers take an
+  injected clock (``Tracer(clock=...)``, the scheduler's ``now=``) so
+  simulated and real runs stay comparable and tests run on virtual
+  time — ``obs/raw-clock-call`` WARNING, scoped to files under
+  ``serving/`` and ``obs/``.
 
 Scope and honesty: this is a lint, not an escape analysis.  It tracks
 direct ``self.X`` mutations (assignment, augmented assignment, ``del``,
@@ -360,6 +366,37 @@ def _lint_class(cls: ast.ClassDef, filename: str) -> list[Diagnostic]:
     return diags
 
 
+_RAW_CLOCKS = {"time", "monotonic"}
+_CLOCK_SCOPED_DIRS = {"serving", "obs"}
+
+
+def _clock_scoped(filename: str) -> bool:
+    parts = Path(filename).parts
+    return bool(_CLOCK_SCOPED_DIRS & set(parts))
+
+
+def _lint_raw_clocks(tree: ast.Module, filename: str) -> list[Diagnostic]:
+    """``obs/raw-clock-call``: direct wall-clock reads in clock-injected
+    layers (serving, obs)."""
+    diags = []
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        fn = call.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _RAW_CLOCKS
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "time"):
+            diags.append(Diagnostic(
+                Severity.WARNING, "obs/raw-clock-call",
+                f"direct time.{fn.attr}() call in a clock-injected layer; "
+                "serving/obs code must read the injected clock so "
+                "simulated and real runs stay comparable",
+                entity=f"{filename}:{call.lineno}",
+                hint="thread the constructor's `now`/`clock` callable "
+                     "through instead (see Tracer(clock=...))"))
+    return diags
+
+
 def lint_source(src: str, filename: str = "<string>") -> list[Diagnostic]:
     try:
         tree = ast.parse(src, filename=filename)
@@ -371,6 +408,8 @@ def lint_source(src: str, filename: str = "<string>") -> list[Diagnostic]:
     for node in ast.walk(tree):
         if isinstance(node, ast.ClassDef):
             diags.extend(_lint_class(node, filename))
+    if _clock_scoped(filename):
+        diags.extend(_lint_raw_clocks(tree, filename))
     return diags
 
 

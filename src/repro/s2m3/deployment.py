@@ -131,7 +131,23 @@ class Deployment:
 
     def evict(self, model_name: str) -> list[str]:
         """Refcounted removal: returns module names actually freed
-        (shared modules survive while any referencing model remains)."""
+        (shared modules survive while any referencing model remains).
+        Raises ``PlanError`` while the model has requests in flight on
+        the serving scheduler — evicting mid-serve would deregister a
+        model whose sequences still hold decode rows and KV pages
+        (invariant ``registry/refcount-consistent``); drain first."""
+        if self.scheduler is not None and \
+                model_name in self.scheduler.inflight_models():
+            from repro.analysis.diagnostics import (Diagnostic, PlanError,
+                                                    Severity)
+            d = Diagnostic(
+                Severity.ERROR, "invariant/registry/refcount-consistent",
+                f"evict({model_name!r}): model has requests in flight on "
+                "the serving scheduler; drain before evicting",
+                entity=model_name,
+                hint="call scheduler.drain() (or let serve() return) "
+                     "before evict()")
+            raise PlanError(d.message, diagnostics=[d])
         if self.engine is not None:
             freed = self.engine.evict_model(model_name)
         else:
@@ -206,21 +222,30 @@ class Deployment:
     def verify(self, *, kernels: bool = False,
                vmem_budget: int | None = None,
                decode_pages: int | None = None,
-               page_size: int | None = None) -> list:
+               page_size: int | None = None,
+               model_check: bool = False,
+               mc_budget: float = 10.0) -> list:
         """Static pre-flight: run the ``repro.analysis`` plan verifier
         against the current plan (memory ledgers, mapping completeness,
         acyclicity, reachability, refcounts, sharing legality, and —
         when decode knobs are given — generative heads' paged-KV page
         budgets) and, with ``kernels=True``, the Pallas kernel checker
-        over the zoo's shapes.  Returns the ``Diagnostic`` list and
-        raises nothing; ``materialize()``/``serve()`` call it and raise
-        ``PlanError`` when it reports ERRORs."""
+        over the zoo's shapes.  ``model_check=True`` additionally
+        explores a bounded schedule-space model of this deployment's
+        serving state machine (``repro.analysis.modelcheck``) under an
+        ``mc_budget``-second wall-clock cap, reporting any invariant
+        counterexample as an ERROR with its transition script.  Returns
+        the ``Diagnostic`` list and raises nothing;
+        ``materialize()``/``serve()`` call it and raise ``PlanError``
+        when it reports ERRORs."""
         from repro.analysis import verify_deployment
 
         return verify_deployment(self, kernels=kernels,
                                  vmem_budget=vmem_budget,
                                  decode_pages=decode_pages,
-                                 page_size=page_size)
+                                 page_size=page_size,
+                                 model_check=model_check,
+                                 mc_budget=mc_budget)
 
     def _preflight(self, stage: str, **verify_kwargs) -> None:
         """Gate a device-touching stage on the static verifier: ERROR

@@ -144,10 +144,13 @@ class DecodeStream:
                 f"request {request.rid}: prefix+prompt+max_new_tokens="
                 f"{worst} exceeds max_seq_len={self.max_seq_len} of "
                 f"decoder {self.module!r}")
-        if self.pool.pages_for(worst) > self.pool.n_pages - 1:
+        with self._lock:
+            need = self.pool.pages_for(worst)
+            usable = self.pool.n_pages - 1
+        if need > usable:
             raise ValueError(
-                f"request {request.rid}: needs {self.pool.pages_for(worst)} "
-                f"pages, pool holds {self.pool.n_pages - 1} usable")
+                f"request {request.rid}: needs {need} pages, pool holds "
+                f"{usable} usable")
 
     # -- admission ------------------------------------------------------
     def depth(self) -> int:
@@ -248,7 +251,15 @@ class DecodeStream:
                 seq = self._pop_admittable()
             if seq is None:
                 break
-            self._prefill(seq)
+            try:
+                self._prefill(seq)
+            except Exception:
+                # a failed prefill must not strand the admitted row,
+                # its pages, or the worst-case reservation — the leak
+                # the model checker's pages/no-leak invariant flags
+                with self._lock:
+                    self._finish_locked(seq)
+                raise
             if self._seq_done(seq):
                 with self._lock:
                     self._finish_locked(seq)
@@ -263,9 +274,8 @@ class DecodeStream:
     def _decode_once(self) -> tuple[list[_GenSeq], int]:
         """One batched decode step over all live rows.  Batch formation
         (incl. page extension) under the lock; dispatch outside it."""
-        R = self.rows.max_slots
-        tokens = np.zeros((R, 1), np.int32)
         with self._lock:
+            tokens = np.zeros((self.rows.max_slots, 1), np.int32)
             live = sorted(self.live.items())
             if not live:
                 return [], 0
@@ -321,15 +331,61 @@ class DecodeStream:
                 return TickReport([], 0, 0)
             self._busy = True
         try:
+            p0 = self.prefills
             finished = self._admit_all()
-            prefills = len(finished)
-            with self._lock:
-                prefills = self.prefills
+            prefills = self.prefills - p0
             more, batch = self._decode_once()
             return TickReport(finished + more, prefills, batch)
         finally:
             with self._lock:
                 self._busy = False
+
+    # -- introspection ---------------------------------------------------
+    def state_view(self):
+        """Snapshot this stream as a ``repro.analysis.invariants``
+        ``StateView`` so the runtime-tagged invariant subset can be
+        evaluated against live serving state (see
+        ``ServeScheduler.check_invariants``)."""
+        from repro.analysis.invariants import SeqView, StateView, WaitView
+        with self._lock:
+            free = set(self.pool._free)
+            owners: dict[int, object] = {}
+            multi: list[int] = []
+            for rid, pages in self.pool.tables.items():
+                for p in pages:
+                    if p in owners or p in free:
+                        multi.append(p)
+                    owners[p] = rid
+            live = tuple(
+                SeqView(
+                    rid=seq.rid,
+                    held_pages=len(self.pool.tables.get(seq.rid, ())),
+                    worst_pages=self._worst.get(seq.rid, 0),
+                    remaining_tokens=max(
+                        int(seq.request.max_new_tokens) - len(seq.tokens), 0),
+                    deadline=(seq.request.slo_deadline
+                              if seq.request.slo_deadline is not None
+                              else float("inf")),
+                    model=seq.request.model)
+                for _, seq in sorted(self.live.items()))
+            waiting = tuple(
+                WaitView(rid=seq.rid,
+                         worst_pages=self.pool.pages_for(
+                             self._worst_tokens(seq.request)),
+                         deadline=deadline, model=seq.request.model)
+                for deadline, _, _, seq in sorted(self.waiting))
+            return StateView(
+                pages_total=self.pool.n_pages,
+                pages_free=self.pool.n_free,
+                page_owners=owners,
+                page_multiowner=tuple(multi),
+                page_size=self.page_size,
+                rows_total=self.rows.max_slots,
+                rows_live=self.rows.n_live,
+                live=live,
+                waiting=waiting,
+                terminal=not self.live and not self.waiting,
+            )
 
     # -- stats ----------------------------------------------------------
     def stats_dict(self) -> dict[str, Any]:

@@ -100,6 +100,10 @@ class SchedulerConfig:
     decode_pages: int = 64        # KV page pool size (incl. 1 dummy page)
     page_size: int = 16           # tokens per KV page
     max_seq_len: int = 256        # prefix + prompt + max_new_tokens cap
+    # evaluate the runtime subset of repro.analysis.invariants after
+    # every scheduler step while draining (PlanError on violation);
+    # cheap at serving scale, disable for microbenchmarks
+    debug_invariants: bool = True
 
     def __post_init__(self):
         if self.max_batch < 1 or self.max_queue_depth < 1:
@@ -240,6 +244,54 @@ class ServeScheduler:
             streams = dict(self.decode)
         return sum(s.cross_task_decode_batches for s in streams.values())
 
+    # -- runtime invariants ---------------------------------------------
+    def inflight_models(self) -> set[str]:
+        """Model names with requests currently in flight (queued,
+        encoding, or decoding) — what ``Deployment.evict()`` consults
+        before deregistering a model out from under its requests."""
+        with self._lock:
+            return {fl.request.model for fl in self.inflight.values()}
+
+    def check_invariants(self, *, raise_on_violation: bool = True):
+        """Evaluate the runtime subset of the shared invariant catalog
+        (``repro.analysis.invariants``) against live serving state:
+        every decode stream's page/row/reservation accounting plus
+        registry refcount consistency against the in-flight set.  The
+        same predicates the model checker exhausts over the schedule
+        space — one catalog, three enforcement layers."""
+        from repro.analysis.diagnostics import Diagnostic, PlanError, Severity
+        from repro.analysis.invariants import StateView, check_state
+
+        violations: list[tuple[str, str]] = []
+        with self._lock:
+            streams = dict(self.decode)
+        for module, stream in streams.items():
+            for name, msg in check_state(stream.state_view(),
+                                         where="runtime"):
+                violations.append((name, f"decode[{module}]: {msg}"))
+        registry = self.engine.registry
+        models = registry.models
+        module_models = {
+            mod: tuple(sorted(mdl.name for mdl in models.values()
+                              if mod in {m.name for m in mdl.modules}))
+            for mod in registry.modules}
+        view = StateView(
+            refcounts={mod: registry.refcount(mod)
+                       for mod in registry.modules},
+            module_models=module_models,
+            inflight_models=tuple(sorted(self.inflight_models())),
+            registered_models=tuple(sorted(models)))
+        violations += [(n, f"registry: {m}")
+                       for n, m in check_state(view, where="runtime")]
+        if violations and raise_on_violation:
+            diags = [Diagnostic(Severity.ERROR, f"invariant/{name}", msg,
+                                entity="ServeScheduler")
+                     for name, msg in violations]
+            raise PlanError(
+                "runtime invariant violation while serving:\n"
+                + "\n".join(d.format() for d in diags), diagnostics=diags)
+        return violations
+
     # -- admission ------------------------------------------------------
     def submit(self, request: Request) -> None:
         """Admit one request: split into per-module stages and enqueue,
@@ -339,17 +391,27 @@ class ServeScheduler:
         return True
 
     def drain(self) -> dict[int, InferenceResult]:
+        """Run until no queue has work; returns a consistent snapshot of
+        the results (the live dict keeps changing under concurrent
+        submitters).  With ``cfg.debug_invariants`` every step is
+        followed by a runtime evaluation of the shared invariant
+        catalog (page conservation, reservation soundness, refcounts) —
+        the same predicates the model checker exhausts offline."""
         while self.step():
-            pass
-        return self.results
+            if self.cfg.debug_invariants:
+                self.check_invariants()
+        if self.cfg.debug_invariants:
+            self.check_invariants()
+        with self._lock:
+            return dict(self.results)
 
     def serve(self, workload: list[Request]) -> list[InferenceResult]:
         """Drain a whole workload: admit in arrival order (backpressure
         included), run to completion, return results in workload order."""
         for q in sorted(workload, key=lambda r: (r.arrival, r.rid)):
             self.submit(q)
-        self.drain()
-        return [self.results[q.rid] for q in workload]
+        results = self.drain()
+        return [results[q.rid] for q in workload]
 
     # -- execution ------------------------------------------------------
     def _service(self, module: str) -> None:
@@ -397,8 +459,12 @@ class ServeScheduler:
         return (x.shape[1:], str(x.dtype))
 
     def _route(self, module: str, stage: _Stage) -> str | None:
+        # _charge() writes _free_at under the lock from concurrent
+        # drains; route against a consistent snapshot, not the live map
+        with self._lock:
+            device_free = dict(self._free_at)
         return self.engine.route_module(
-            module, device_free=dict(self._free_at), ready_time=self._now(),
+            module, device_free=device_free, ready_time=self._now(),
             source=stage.request.source, request=stage.request)
 
     def _charge(self, module: str, host: str | None, k: int,
@@ -459,28 +525,38 @@ class ServeScheduler:
         t1 = self._now()
         modality = self.engine.registry.modules[module].modality
         models = sorted({s.request.model for s in batch})
+        # per-request bookkeeping under the lock: two encoder batches
+        # finishing concurrently for the same request must not both see
+        # an empty pending set and double-enqueue the head.  Ready heads
+        # are collected and submitted after release (stream construction
+        # and head enqueue do their own locking).
+        ready: list[tuple[_Stage, dict[str, Any], int]] = []
         for s, o in zip(batch, outs):
-            fl = self.inflight[s.rid]
+            with self._lock:
+                fl = self.inflight[s.rid]
+                root = fl.root_sid
             self.tracer.record(module, "batch", t_pop, t0, rid=s.rid,
-                               parent=fl.root_sid, batch=len(batch),
+                               parent=root, batch=len(batch),
                                models=models)
             span = self.tracer.record(
-                module, "encode", t0, t1, rid=s.rid, parent=fl.root_sid,
+                module, "encode", t0, t1, rid=s.rid, parent=root,
                 host=used, batch=len(batch), models=models,
                 cross_task=len(models) >= 2)
-            fl.enc_outputs[modality] = o
-            if used:
-                fl.devices[module] = used
-            fl.timeline.append(span)
-            fl.pending.discard(module)
-            if not fl.pending:
-                head = self.engine.registry.models[s.request.model].head
-                if head.generative:
-                    stream = self._ensure_stream(head.name)
-                    stream.submit(s.rid, s.request, dict(fl.enc_outputs),
-                                  parent=fl.root_sid)
-                else:
-                    self._enqueue(_Stage(s.rid, head.name, s.request))
+            with self._lock:
+                fl.enc_outputs[modality] = o
+                if used:
+                    fl.devices[module] = used
+                fl.timeline.append(span)
+                fl.pending.discard(module)
+                if not fl.pending:
+                    ready.append((s, dict(fl.enc_outputs), root))
+        for s, enc_outputs, root in ready:
+            head = self.engine.registry.models[s.request.model].head
+            if head.generative:
+                stream = self._ensure_stream(head.name)
+                stream.submit(s.rid, s.request, enc_outputs, parent=root)
+            else:
+                self._enqueue(_Stage(s.rid, head.name, s.request))
 
     def _service_decode(self, module: str, stream: DecodeStream) -> None:
         """One decode-stream service round: admissions + one batched

@@ -470,3 +470,42 @@ def test_verify_deployment_with_kernels():
     diags = verify_deployment(dep, kernels=True)
     assert errors(diags) == [], format_report(diags)
     assert any(d.code == "kernel/summary" for d in diags)
+
+
+# ---- obs/raw-clock-call -------------------------------------------------
+
+_CLOCKY = """
+import time
+
+def stamp():
+    return time.time()
+
+def tick():
+    return time.monotonic()
+
+def ok():
+    return time.perf_counter()
+"""
+
+
+def test_raw_clock_flagged_in_serving_and_obs():
+    for scoped in ("src/repro/serving/x.py", "src/repro/obs/x.py"):
+        diags = lint_source(_CLOCKY, filename=scoped)
+        codes = [d.code for d in diags]
+        assert codes == ["obs/raw-clock-call"] * 2, (scoped, codes)
+        # perf_counter (the injected-clock backend) is not flagged
+        assert all("perf_counter" not in d.message for d in diags)
+
+
+def test_raw_clock_ignored_outside_scoped_layers():
+    assert lint_source(_CLOCKY, filename="src/repro/launch/train.py") == []
+
+
+def test_serving_and_obs_trees_have_no_raw_clocks():
+    import repro.obs as obs
+    from pathlib import Path
+    from repro.analysis.concurrency_lint import lint_paths
+
+    diags = lint_paths([Path(obs.__file__).parent])
+    diags += lint_serving()
+    assert [d for d in diags if d.code == "obs/raw-clock-call"] == []

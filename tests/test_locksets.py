@@ -1,0 +1,175 @@
+"""Interprocedural lockset race detector: the serving tree must analyze
+clean, seeded lock-removal and lock-order mutations must be caught, and
+the races it found (and we fixed) in ``serving/`` must stay fixed —
+each regression test replays its static counterexample by reintroducing
+the bug and asserting the detector reports it."""
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+import repro.serving as serving
+from repro.analysis import locksets as ls
+from repro.analysis.diagnostics import Severity
+
+pytestmark = pytest.mark.analysis
+
+
+def _codes(report):
+    return [d.code for d in report.diagnostics]
+
+
+def _serving_sources():
+    root = Path(serving.__file__).parent
+    return {f: (root / f).read_text()
+            for f in ("scheduler.py", "decode.py", "kvcache.py",
+                      "engine.py")}
+
+
+# ---- the tree is clean --------------------------------------------------
+
+def test_serving_tree_is_lockset_clean():
+    rep = ls.lint_serving_locksets()
+    assert rep.diagnostics == [], [d.format() for d in rep.diagnostics]
+    assert rep.contexts > 20 and rep.accesses > 100
+
+
+def test_self_test_is_all_clear():
+    diags = ls.self_test()
+    assert diags
+    assert all(d.severity == Severity.INFO for d in diags), \
+        [d.format() for d in diags]
+    codes = [d.code for d in diags]
+    assert codes.count("locksets/mutation-caught") >= 2
+
+
+# ---- seeded mutations on the real tree ----------------------------------
+
+def _analyze_with(mutated: dict[str, str]):
+    srcs = _serving_sources()
+    srcs.update(mutated)
+    return ls.analyze_sources(sorted(srcs.items()))
+
+
+def test_strip_lock_must_bite():
+    with pytest.raises(ValueError, match="no lock"):
+        ls.strip_lock("class A:\n    def f(self):\n        pass\n",
+                      "A", "f")
+
+
+@pytest.mark.parametrize("cls,method,attr", [
+    ("DecodeStream", "submit", "waiting"),
+    ("DecodeStream", "stats_dict", "live"),
+    ("ServeScheduler", "_enqueue", "queues"),
+])
+def test_removed_lock_is_detected(cls, method, attr):
+    fname = ("decode.py" if cls == "DecodeStream" else "scheduler.py")
+    src = _serving_sources()[fname]
+    rep = _analyze_with({fname: ls.strip_lock(src, cls, method)})
+    hits = [d for d in rep.diagnostics
+            if d.code in ("locksets/unlocked-write",
+                          "locksets/unlocked-read",
+                          "locksets/inconsistent-locks")
+            and f"{cls}.{method}" in d.message]
+    assert hits, [d.format() for d in rep.diagnostics]
+    assert any(attr in d.message for d in hits)
+
+
+def test_lock_order_cycle_is_detected():
+    rep = ls.analyze_sources([("deadlock.py", ls._DEADLOCK_SNIPPET)])
+    cycles = [d for d in rep.diagnostics
+              if d.code == "locksets/lock-order-cycle"]
+    assert cycles and "Left._lock" in cycles[0].message
+
+
+# ---- regression: the races we fixed stay fixed --------------------------
+# Each test replays the static counterexample the detector originally
+# reported against serving/ by reverting the fix and asserting the
+# finding comes back.
+
+def test_route_snapshots_free_at_under_lock():
+    """ServeScheduler._route used to read the live _free_at map while
+    _charge wrote it under the lock from concurrent drains."""
+    src = _serving_sources()["scheduler.py"]
+    rep = _analyze_with(
+        {"scheduler.py": ls.strip_lock(src, "ServeScheduler", "_route")})
+    assert any("_free_at" in d.message and "_route" in d.message
+               for d in rep.diagnostics), \
+        [d.format() for d in rep.diagnostics]
+
+
+def test_drain_snapshots_results_under_lock():
+    """drain()/serve() used to hand out the live results dict while
+    decode completions kept writing it."""
+    src = _serving_sources()["scheduler.py"]
+    rep = _analyze_with(
+        {"scheduler.py": ls.strip_lock(src, "ServeScheduler", "drain")})
+    assert any("results" in d.message for d in rep.diagnostics), \
+        [d.format() for d in rep.diagnostics]
+
+
+def test_encoder_batch_bookkeeping_is_locked():
+    """_run_encoder_batch used to mutate in-flight bookkeeping (pending
+    sets, encoder outputs) outside the scheduler lock."""
+    src = _serving_sources()["scheduler.py"]
+    rep = _analyze_with({"scheduler.py": ls.strip_lock(
+        src, "ServeScheduler", "_run_encoder_batch")})
+    assert any("_run_encoder_batch" in d.message
+               for d in rep.diagnostics), \
+        [d.format() for d in rep.diagnostics]
+
+
+# ---- analysis semantics -------------------------------------------------
+
+def test_pragma_suppresses_finding():
+    src = textwrap.dedent("""
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def put(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def peek(self):
+                return self.items[-1]  # lockset: ignore
+    """)
+    rep = ls.analyze_sources([("box.py", src)])
+    assert rep.diagnostics == [], [d.format() for d in rep.diagnostics]
+
+
+def test_caller_locked_passive_class_is_clean():
+    """A lock-free class mutated only under its caller's lock (the
+    PagePool pattern) must not be flagged: entry points are public
+    methods of lock-owning classes, so the passive class is analyzed
+    only under the locksets its callers actually hold."""
+    src = textwrap.dedent("""
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self.free = [1, 2, 3]
+
+            def take(self):
+                return self.free.pop()
+
+        class Owner:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.pool = Pool()
+
+            def grab(self):
+                with self._lock:
+                    return self.pool.take()
+    """)
+    rep = ls.analyze_sources([("pool.py", src)])
+    assert rep.diagnostics == [], [d.format() for d in rep.diagnostics]
+
+
+def test_syntax_error_reported_not_raised():
+    rep = ls.analyze_sources([("bad.py", "def broken(:\n")])
+    assert _codes(rep) == ["locksets/syntax-error"]

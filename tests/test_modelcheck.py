@@ -1,0 +1,151 @@
+"""Schedule-space model checker: exhaustive exploration of bounded
+serving interleavings against the shared invariant catalog, replayable
+counterexamples, the seeded-mutation self-test, and the
+``Deployment.verify(model_check=True)`` wiring."""
+
+import json
+
+import pytest
+
+from repro.analysis import invariants as inv
+from repro.analysis import modelcheck as mc
+from repro.analysis.diagnostics import Severity, errors
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.s2m3 import Deployment
+
+pytestmark = pytest.mark.modelcheck
+
+GB = 1024**3
+
+
+# ---- invariant catalog --------------------------------------------------
+
+def test_catalog_is_populated_and_layered():
+    cat = inv.catalog()
+    names = {i.name for i in cat}
+    assert {"pages/no-double-free", "pages/conservation", "pages/no-leak",
+            "admission/reservation-sound", "rows/slot-consistent",
+            "registry/refcount-consistent", "registry/decoder-pinned",
+            "sched/deadlock-free", "slo/bounded-inversion"} <= names
+    # every invariant names at least one enforcement layer, and the
+    # runtime subset the scheduler asserts is non-empty
+    assert all(i.checked_by for i in cat)
+    assert any("runtime" in i.checked_by for i in cat)
+    assert any("model-check" in i.checked_by for i in cat)
+    for name in names:
+        assert name in inv.catalog_table()
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="registered twice"):
+        inv.invariant("pages/no-leak", layer="pages")(lambda v: [])
+
+
+def test_check_state_filters_by_layer():
+    # a deadlocked non-terminal state: model-check-only invariant
+    view = inv.StateView(enabled=(), terminal=False,
+                         waiting=(inv.WaitView(rid=1, worst_pages=1),))
+    hits = {n for n, _ in inv.check_state(view)}
+    assert "sched/deadlock-free" in hits
+    runtime_hits = {n for n, _ in inv.check_state(view, where="runtime")}
+    assert "sched/deadlock-free" not in runtime_hits
+
+
+def test_partial_view_is_silent():
+    # producers that only know part of the state trigger nothing
+    assert inv.check_state(inv.StateView()) == []
+
+
+# ---- clean exploration --------------------------------------------------
+
+def test_default_scenario_verifies_clean_and_complete():
+    res = mc.check(mc.default_scenario())
+    assert res.ok and res.complete
+    assert res.counterexample is None
+    assert res.states > 10 and res.transitions >= res.states - 1
+    assert "no invariant violation" in res.summary()
+
+
+def test_budget_truncates_exploration():
+    res = mc.check(mc.default_scenario(), budget_s=0.0)
+    assert not res.complete and res.counterexample is None
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="unknown mutation"):
+        mc.MCConfig(requests=(), models=(), mutate="no-such-bug")
+    with pytest.raises(ValueError, match="unregistered"):
+        mc.MCConfig(requests=(mc.MCRequest(rid=1, model="ghost"),),
+                    models=(mc.MCModel("chat", decoder="lm"),))
+
+
+# ---- seeded mutations ---------------------------------------------------
+
+@pytest.mark.parametrize("mutation", sorted(mc.MUTATIONS))
+def test_mutation_caught_and_replayable(mutation):
+    """Each seeded serving bug is caught by the invariant it breaks, and
+    the counterexample script replays to the same violation."""
+    cfg = mc.default_scenario(mutate=mutation)
+    res = mc.check(cfg)
+    assert res.counterexample is not None, mutation
+    cx = res.counterexample
+    assert cx.invariant in mc.MUTATIONS[mutation]
+    assert cx.script and cx.format_script()
+    replayed = mc.replay(cfg, cx.script)
+    assert any(name == cx.invariant for name, _ in replayed)
+
+
+def test_self_test_is_all_clear():
+    diags = mc.self_test()
+    assert diags and not errors(diags)
+    caught = {d.message.split("'")[1] for d in diags
+              if d.code == "modelcheck/mutation-caught"}
+    assert caught == set(mc.MUTATIONS)
+
+
+def test_counterexample_exports_chrome_trace(tmp_path):
+    res = mc.check(mc.default_scenario(mutate="double-free"))
+    cx = res.counterexample
+    trace = cx.to_chrome_trace()
+    assert trace["traceEvents"]
+    path = tmp_path / "cx.json"
+    cx.save_trace(path)
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_replay_rejects_disabled_transition():
+    cfg = mc.default_scenario()
+    with pytest.raises(ValueError, match="not enabled"):
+        mc.replay(cfg, [("finish", 99)])
+
+
+# ---- deployment wiring --------------------------------------------------
+
+def _dep():
+    from repro.core.module import ModelSpec, ModuleSpec
+
+    cluster = ClusterSpec(devices=[
+        DeviceSpec(f"dev{i}", 1 * GB, 1e9) for i in range(2)])
+    enc = ModuleSpec("enc", "encoder", "text", 1_000)
+    lm = ModuleSpec("lm", "head", "task", 2_000, generative=True,
+                    kv_bytes_per_token=64)
+    return (Deployment(cluster)
+            .add_model(ModelSpec("chat", "chat", (enc,), lm))
+            .add_model(ModelSpec("summarize", "sum", (enc,), lm))
+            .plan("greedy"))
+
+
+def test_verify_model_check_reports_clean():
+    diags = _dep().verify(model_check=True)
+    codes = [d.code for d in diags]
+    assert "modelcheck/clean" in codes
+    assert not errors(diags)
+
+
+def test_scenario_from_deployment_shares_modules():
+    cfg = mc.scenario_from_deployment(_dep())
+    assert {m.name for m in cfg.models} == {"chat", "summarize"}
+    decoders = {m.decoder for m in cfg.models}
+    assert decoders == {"lm"}          # shared decoder survives derivation
+    res = mc.check(cfg)
+    assert res.ok and res.complete

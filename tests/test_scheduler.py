@@ -319,3 +319,112 @@ def test_unmapped_placement_host_raises():
     with pytest.raises(KeyError, match="ghost-dev"):
         eng.deploy_model(model, {"h": lambda: (lambda p, enc: p,
                                                jnp.ones(2))})
+
+
+# ---- runtime invariants + evict-during-serve (bugfixes) -----------------
+
+def _gen_sched(dep, **kw):
+    cfg = SchedulerConfig(decode_rows=2, decode_pages=17, page_size=8,
+                          max_seq_len=32, **kw)
+    return ServeScheduler(dep.engine, config=cfg)
+
+
+def test_evict_during_serve_raises_structured_plan_error(
+        shared_lm_deployment):
+    """dep.evict() with requests in flight must raise a structured
+    PlanError (not deregister a model out from under its sequences);
+    after draining, the evict succeeds and verify() stays clean."""
+    from repro.analysis.diagnostics import PlanError, errors
+
+    dep = shared_lm_deployment
+    head = dep.registry.models["chat"].head
+    sched = _gen_sched(dep)
+    old_sched, dep.scheduler = dep.scheduler, sched
+    try:
+        sched.submit(Request(0, "chat", "dev0", prompt=(1, 2, 3),
+                             max_new_tokens=3))
+        assert sched.inflight_models() == {"chat"}
+        with pytest.raises(PlanError) as ei:
+            dep.evict("chat")
+        assert ei.value.diagnostics
+        assert any("refcount-consistent" in d.code
+                   for d in ei.value.diagnostics)
+        # nothing was corrupted by the refused evict: model still
+        # registered, shared decoder still referenced by both models,
+        # runtime invariants hold
+        assert "chat" in dep.registry.models
+        assert dep.registry.refcount("tinylm") == 2
+        assert sched.check_invariants() == []
+
+        sched.drain()
+        assert sched.inflight_models() == set()
+        dep.evict("chat")                     # quiesced: now legal
+        assert "chat" not in dep.registry.models
+        assert dep.registry.refcount("tinylm") == 1  # summarize remains
+        assert not errors(dep.verify())
+    finally:
+        dep.scheduler = old_sched
+        if "chat" not in dep.registry.models:
+            from repro.core.module import ModelSpec as _MS
+            dep.add_model(_MS("chat", "chat", (), head))
+
+
+def test_drain_asserts_runtime_invariant_catalog(shared_lm_deployment):
+    """cfg.debug_invariants (default on) evaluates the shared invariant
+    catalog after every step; a clean drain ends with page/row/refcount
+    accounting the catalog accepts."""
+    dep = shared_lm_deployment
+    sched = _gen_sched(dep)
+    assert sched.cfg.debug_invariants
+    for i in range(3):
+        sched.submit(Request(i, "chat" if i % 2 else "summarize", "dev0",
+                             prompt=(1, 2, 3), max_new_tokens=2 + i))
+    results = sched.drain()
+    assert len(results) == 3
+    assert sched.check_invariants() == []
+    view = sched.decode["tinylm"].state_view()
+    assert view.terminal and view.pages_total - view.pages_free == 1
+
+
+def test_prefill_failure_does_not_leak_pages_or_rows(
+        shared_lm_deployment, monkeypatch):
+    """A prefill that raises used to strand the admitted row, its
+    prefix pages, and the worst-case reservation (the model checker's
+    pages/no-leak counterexample, hit at runtime via any device error
+    during prefill).  The stream must roll the admission back."""
+    from repro.analysis.invariants import check_state
+
+    dep = shared_lm_deployment
+    sched = _gen_sched(dep)
+    sched.submit(Request(0, "chat", "dev0", prompt=(1, 2, 3),
+                         max_new_tokens=2))
+    stream = sched.decode["tinylm"]
+
+    def boom(seq):
+        raise RuntimeError("injected prefill failure")
+
+    monkeypatch.setattr(stream, "_prefill", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        stream.tick()
+    assert stream.rows.n_live == 0
+    assert stream.pool.n_live_pages == 1       # dummy page only
+    assert stream._reserved == 0 and stream._worst == {}
+    view = stream.state_view()
+    assert view.terminal
+    assert check_state(view, where="runtime") == []
+
+
+def test_tick_reports_per_tick_prefills(shared_lm_deployment):
+    """TickReport.prefills used to echo the *cumulative* prefill
+    counter; it must count this tick's admissions only."""
+    dep = shared_lm_deployment
+    sched = _gen_sched(dep)
+    for i in range(2):
+        sched.submit(Request(i, "chat", "dev0", prompt=(1, 2, 3),
+                             max_new_tokens=4))
+    stream = sched.decode["tinylm"]
+    r1 = stream.tick()
+    assert r1.prefills == 2
+    r2 = stream.tick()
+    assert r2.prefills == 0                    # not the cumulative 2
+    sched.drain()
